@@ -1,0 +1,18 @@
+"""End-to-end serving driver (the paper's kind: storage-backed serving).
+
+Batched requests share a system prefix; the EdgeKV page store dedups it
+as content-hashed *global* pages while each request's own tokens are
+*local* pages — then a real model prefills + decodes against it.
+
+Run: PYTHONPATH=src python examples/serve_edgekv.py
+(This is a thin wrapper over ``python -m repro.launch.serve``.)
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "stablelm-3b", "--reduced",
+                "--requests", "8", "--prompt-len", "24",
+                "--gen-len", "8", "--shared-prefix-len", "16"]
+    main()

@@ -1,0 +1,37 @@
+"""Train a small model with quorum checkpointing + simulated preemption.
+
+Demonstrates: loss goes down; a mid-run 'preemption' (checkpoint + fresh
+process state) resumes bit-exactly; a host failure during training
+neither blocks the save (quorum skips it) nor the restore.
+
+Run: PYTHONPATH=src python examples/train_small.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.checkpoint import QuorumCheckpointer
+from repro.train.loop import train_loop
+
+cfg = reduced(get_config("stablelm-3b"))
+print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+
+with tempfile.TemporaryDirectory() as d:
+    ck = QuorumCheckpointer(d + "/ckpt", n_hosts=5, replication=3)
+
+    print("phase 1: train 8 steps, checkpoint...")
+    a = train_loop(cfg, steps=8, batch=4, seq_len=64, lr=3e-3, seed=7,
+                   ckpt=ck, ckpt_every=100, async_ckpt=False)
+    print(f"  losses: {[f'{l:.3f}' for l in a.losses]}")
+
+    print("phase 2: a storage host dies; resume and keep training...")
+    ck.kill_host(2)
+    b = train_loop(cfg, steps=20, batch=4, seq_len=64, lr=3e-3, seed=7,
+                   ckpt=ck, ckpt_every=100, async_ckpt=False)
+    print(f"  resumed from step {b.restored_from}")
+    print(f"  losses: {[f'{l:.3f}' for l in b.losses]}")
+
+    first, last = np.mean(a.losses[:3]), np.mean(b.losses[-3:])
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'decreasing: ok' if last < first else 'NOT decreasing'})")

@@ -1,0 +1,3 @@
+from .quorum_ckpt import QuorumCheckpointer
+
+__all__ = ["QuorumCheckpointer"]

@@ -1,0 +1,242 @@
+"""Quorum checkpointing — EdgeKV's replication manager applied to training
+state.
+
+Every param/optimizer leaf is a *key*; the consistent-hash ring places
+each key on an owner host whose replica set is the owner + its R-1 ring
+successors (an EdgeKV group). A shard write is durable when a **majority**
+of its replica set persisted it — a dead or straggling host can neither
+block the step (the paper's quorum insight == checkpoint-time straggler
+mitigation) nor lose data (minority failure tolerated on restore).
+
+Hosts are directories (``root/host<i>/``) so fault injection in tests is
+literal directory removal. The manifest commit is atomic (write + rename)
+and carries per-shard checksums; restore reads each shard from the first
+live replica whose checksum verifies.
+
+Elastic rescale: changing the host count only moves K/m keys (consistent
+hashing) — ``reshard()`` copies exactly the moved shards.
+
+Backup mirroring (EdgeKV §7.3): an optional mirror root (another pod)
+receives asynchronous non-voting copies; ``restore(prefer_backup=True)``
+reads from it when the primary pod is gone (read-only semantics).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.hashring import ChordRing
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+class QuorumCheckpointer:
+    def __init__(self, root: str, n_hosts: int, *, replication: int = 3,
+                 vnodes: int = 8, mirror_root: Optional[str] = None):
+        self.root = Path(root)
+        self.n_hosts = n_hosts
+        self.R = min(replication, n_hosts)
+        self.ring = ChordRing(virtual_nodes=vnodes)
+        for h in range(n_hosts):
+            self.ring.add_node(f"host{h}")
+            (self.root / f"host{h}").mkdir(parents=True, exist_ok=True)
+        self.mirror_root = Path(mirror_root) if mirror_root else None
+        if self.mirror_root:
+            self.mirror_root.mkdir(parents=True, exist_ok=True)
+        self.dead: set = set()
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ placing
+    def replicas_of(self, key: str) -> List[str]:
+        return self.ring.preference_list(key, self.R)
+
+    # ------------------------------------------------------------- saving
+    def save(self, step: int, state, *, mirror: bool = True) -> Dict:
+        """Quorum write of every shard; returns the committed manifest.
+        Raises if any shard misses its majority (data would be at risk)."""
+        leaves = _leaf_paths(state)
+        manifest = {"step": step, "shards": {}, "n_hosts": self.n_hosts,
+                    "replication": self.R}
+        for key, leaf in leaves:
+            arr = np.asarray(leaf)
+            reps = self.replicas_of(key)
+            acks = []
+            for host in reps:
+                if host in self.dead:
+                    continue  # straggler/dead host: skipped, not awaited
+                p = self.root / host / f"step{step}" / (
+                    key.replace("/", "__") + ".npy")
+                p.parent.mkdir(parents=True, exist_ok=True)
+                np.save(p, arr)
+                acks.append(host)
+            quorum = len(reps) // 2 + 1
+            if len(acks) < quorum:
+                raise RuntimeError(
+                    f"shard {key}: only {len(acks)}/{len(reps)} replicas "
+                    f"wrote (need {quorum})")
+            manifest["shards"][key] = {
+                "replicas": reps, "acked": acks, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "sha1": _checksum(arr),
+            }
+        tmp = self.root / f".manifest-{step}.tmp"
+        tmp.write_text(json.dumps(manifest))
+        tmp.rename(self.root / f"manifest-{step}.json")
+        if mirror and self.mirror_root is not None:
+            self._mirror_async(step, leaves, manifest)
+        return manifest
+
+    def save_async(self, step: int, state) -> threading.Thread:
+        """Overlap checkpoint IO with compute: snapshot to host memory now,
+        write in a background thread."""
+        snap = jax.tree.map(np.asarray, state)
+        t = threading.Thread(target=self.save, args=(step, snap),
+                             daemon=True)
+        t.start()
+        self._async_thread = t
+        return t
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+
+    def _mirror_async(self, step, leaves, manifest) -> None:
+        def run():
+            d = self.mirror_root / f"step{step}"
+            d.mkdir(parents=True, exist_ok=True)
+            for key, leaf in leaves:
+                np.save(d / (key.replace("/", "__") + ".npy"),
+                        np.asarray(leaf))
+            (self.mirror_root / f"manifest-{step}.json").write_text(
+                json.dumps(manifest))
+        th = threading.Thread(target=run, daemon=True)
+        th.start()
+        self._mirror_thread = th
+
+    # ------------------------------------------------------------ restore
+    def latest_step(self) -> Optional[int]:
+        steps = [int(p.stem.split("-")[1])
+                 for p in self.root.glob("manifest-*.json")]
+        return max(steps) if steps else None
+
+    def restore(self, template, step: Optional[int] = None, *,
+                prefer_backup: bool = False):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint manifest")
+        if prefer_backup:
+            return self._restore_from_mirror(template, step)
+        manifest = json.loads(
+            (self.root / f"manifest-{step}.json").read_text())
+        leaves = _leaf_paths(template)
+        out = []
+        for key, leaf in leaves:
+            info = manifest["shards"][key]
+            arr = None
+            for host in info["acked"] + [h for h in info["replicas"]
+                                         if h not in info["acked"]]:
+                p = self.root / host / f"step{step}" / (
+                    key.replace("/", "__") + ".npy")
+                if host in self.dead or not p.exists():
+                    continue
+                cand = np.load(p)
+                if _checksum(cand) == info["sha1"]:
+                    arr = cand
+                    break
+            if arr is None:
+                raise RuntimeError(
+                    f"shard {key}: no surviving replica (lost "
+                    f"{info['replicas']})")
+            out.append(arr.astype(leaf.dtype).reshape(leaf.shape))
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _restore_from_mirror(self, template, step: int):
+        if self.mirror_root is None:
+            raise RuntimeError("no mirror configured")
+        manifest = json.loads(
+            (self.mirror_root / f"manifest-{step}.json").read_text())
+        leaves = _leaf_paths(template)
+        out = []
+        for key, leaf in leaves:
+            p = self.mirror_root / f"step{step}" / (
+                key.replace("/", "__") + ".npy")
+            arr = np.load(p)
+            if _checksum(arr) != manifest["shards"][key]["sha1"]:
+                raise RuntimeError(f"mirror shard {key} corrupt")
+            out.append(arr.astype(leaf.dtype).reshape(leaf.shape))
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------ elastic
+    def reshard(self, new_n_hosts: int) -> Dict[str, int]:
+        """Elastic rescale: rebuild the ring with the new host set and copy
+        ONLY the shards whose owner moved (consistent hashing bound K/m).
+        Returns {'moved': k, 'total': K}."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("nothing to reshard")
+        manifest = json.loads(
+            (self.root / f"manifest-{step}.json").read_text())
+        new = QuorumCheckpointer(str(self.root), new_n_hosts,
+                                 replication=self.R,
+                                 mirror_root=(str(self.mirror_root)
+                                              if self.mirror_root else None))
+        moved = 0
+        for key, info in manifest["shards"].items():
+            new_reps = new.replicas_of(key)
+            if set(new_reps) == set(info["replicas"]):
+                continue
+            moved += 1
+            # copy from a surviving old replica to the new replica set
+            src = None
+            for host in info["acked"]:
+                p = self.root / host / f"step{step}" / (
+                    key.replace("/", "__") + ".npy")
+                if p.exists() and host not in self.dead:
+                    src = p
+                    break
+            if src is None:
+                raise RuntimeError(f"shard {key} unrecoverable")
+            arr = np.load(src)
+            for host in new_reps:
+                dst = self.root / host / f"step{step}" / (
+                    key.replace("/", "__") + ".npy")
+                dst.parent.mkdir(parents=True, exist_ok=True)
+                if not dst.exists():
+                    np.save(dst, arr)
+            info["replicas"] = new_reps
+            info["acked"] = new_reps
+        manifest["n_hosts"] = new_n_hosts
+        (self.root / f"manifest-{step}.json").write_text(
+            json.dumps(manifest))
+        return {"moved": moved, "total": len(manifest["shards"])}
+
+    # ------------------------------------------------------- fault inject
+    def kill_host(self, h: int) -> None:
+        self.dead.add(f"host{h}")
+        shutil.rmtree(self.root / f"host{h}", ignore_errors=True)
+
+    def revive_host(self, h: int) -> None:
+        self.dead.discard(f"host{h}")
+        (self.root / f"host{h}").mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,44 @@
+"""EdgeKV backup groups (§7.3 inter-group fault tolerance).
+
+Static assignment rule from the paper: the backup of a group is the first
+group directly following its gateway on the overlay. The backup group's
+nodes join the original group's Raft as **non-voting learners**: they
+receive every AppendEntries and commit notification but are never counted
+toward the quorum and never vote — so a slow or dead backup can't stall the
+original group, and the backup can't diverge (it only ever applies entries
+the original committed).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .kvstore import EdgeKVCluster
+
+
+def assign_backup_groups(cluster: "EdgeKVCluster") -> None:
+    """Wire every group's successor group as its backup (learner set)."""
+    for gid, gw_id in cluster.gateway_of_group.items():
+        backup_gw = cluster.ring.successor_group(gw_id)
+        backup_gid = cluster.gateways[backup_gw].group.id
+        if backup_gid == gid:  # single-group degenerate case
+            continue
+        cluster.backup_of[gid] = backup_gid
+        cluster.groups[gid].attach_learners(cluster.groups[backup_gid])
+
+
+def backup_lag(cluster: "EdgeKVCluster", gid: str) -> int:
+    """Entries committed by ``gid`` but not yet applied at its backup.
+
+    Used by tests and by the checkpoint mirror to decide whether a backup
+    is fresh enough to restore from.
+    """
+    group = cluster.groups[gid]
+    lead = group.raft.run_until_leader()
+    if gid not in cluster.backup_of:
+        return 0
+    lag = 0
+    for lid in group.learner_ids:
+        learner = group.raft.nodes[lid]
+        lag = max(lag, lead.commit_index - learner.last_applied)
+    return lag

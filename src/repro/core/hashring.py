@@ -1,0 +1,235 @@
+"""Chord-style consistent-hash ring with finger tables and virtual nodes.
+
+Faithful to EdgeKV §3.1/§3.2.3: gateway nodes live on a 2**BITS identifier
+ring; a key is owned by its *successor* gateway. Lookup uses the optimized
+iterative closest-preceding-finger algorithm of Stoica et al. (the paper's
+[17]), giving O(log m) hops and O(log m) routing state per node. Virtual
+nodes (§7.1) improve load balance; weights let powerful groups own more of
+the key space.
+
+The ring is a *control-plane* structure: pure Python, deterministic, no JAX.
+It is shared by the paper-faithful reproduction (``core/kvstore.py``,
+``sim/``) and by the framework features (``checkpoint/manifest.py``,
+``edgecache/pages.py``).
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+BITS = 64
+RING_SIZE = 1 << BITS
+
+
+def stable_hash(key: str, salt: str = "") -> int:
+    """Collision-resistant, process-stable hash onto the identifier ring."""
+    h = hashlib.sha1((salt + key).encode("utf-8")).digest()
+    return int.from_bytes(h[:8], "big") % RING_SIZE
+
+
+def _in_open_interval(x: int, a: int, b: int) -> bool:
+    """x in (a, b) on the ring (wrapping)."""
+    if a < b:
+        return a < x < b
+    return x > a or x < b  # interval wraps through 0
+
+
+@dataclass
+class VirtualNode:
+    vhash: int
+    owner: str  # physical node id
+
+
+@dataclass
+class FingerEntry:
+    start: int
+    node: int  # vnode hash of successor(start)
+
+
+class ChordRing:
+    """Consistent-hash ring over named physical nodes.
+
+    Parameters
+    ----------
+    virtual_nodes:
+        Base number of virtual nodes per physical node (§7.1 suggests
+        ~log(N)). Per-node ``weights`` multiply this count.
+    """
+
+    def __init__(self, virtual_nodes: int = 1):
+        self.base_vnodes = max(1, int(virtual_nodes))
+        self.weights: Dict[str, float] = {}
+        self._vhashes: List[int] = []       # sorted virtual hashes
+        self._vowners: List[str] = []       # parallel owner ids
+        self.nodes: Dict[str, List[int]] = {}  # physical id -> its vhashes
+        self._fingers: Dict[int, List[FingerEntry]] = {}
+
+    # ------------------------------------------------------------- topology
+    def add_node(self, node_id: str, weight: float = 1.0) -> None:
+        if node_id in self.nodes:
+            raise ValueError(f"node {node_id!r} already in ring")
+        count = max(1, round(self.base_vnodes * weight))
+        vhashes = []
+        for i in range(count):
+            vh = stable_hash(node_id, salt=f"vnode-{i}:")
+            # linear-probe extremely unlikely collisions deterministically
+            while vh in self._vhashes or vh in vhashes:
+                vh = (vh + 1) % RING_SIZE
+            vhashes.append(vh)
+        self.nodes[node_id] = vhashes
+        self.weights[node_id] = weight
+        for vh in vhashes:
+            idx = bisect.bisect_left(self._vhashes, vh)
+            self._vhashes.insert(idx, vh)
+            self._vowners.insert(idx, node_id)
+        self._rebuild_fingers()
+
+    def remove_node(self, node_id: str) -> None:
+        if node_id not in self.nodes:
+            raise KeyError(node_id)
+        for vh in self.nodes.pop(node_id):
+            idx = bisect.bisect_left(self._vhashes, vh)
+            del self._vhashes[idx]
+            del self._vowners[idx]
+        self.weights.pop(node_id, None)
+        self._rebuild_fingers()
+
+    # -------------------------------------------------------------- lookup
+    def successor(self, point: int) -> str:
+        """Physical owner of identifier ``point`` (its successor vnode)."""
+        if not self._vhashes:
+            raise RuntimeError("empty ring")
+        idx = bisect.bisect_left(self._vhashes, point % RING_SIZE)
+        if idx == len(self._vhashes):
+            idx = 0
+        return self._vowners[idx]
+
+    def locate(self, key: str) -> str:
+        """Responsible physical node for ``key`` (EdgeKV Algorithm 2)."""
+        return self.successor(stable_hash(key))
+
+    def locate_hash(self, key_hash: int) -> str:
+        return self.successor(key_hash)
+
+    # Finger-table routing -- used to *verify* the O(log m) hop bound and to
+    # model per-hop latency in the simulator. Data-plane callers use
+    # ``locate`` directly (one control-plane computation).
+    def _rebuild_fingers(self) -> None:
+        self._fingers.clear()
+        if not self._vhashes:
+            return
+        for vh in self._vhashes:
+            entries = []
+            for i in range(BITS):
+                start = (vh + (1 << i)) % RING_SIZE
+                entries.append(FingerEntry(start, self._succ_vhash(start)))
+            self._fingers[vh] = entries
+
+    def _succ_vhash(self, point: int) -> int:
+        idx = bisect.bisect_left(self._vhashes, point % RING_SIZE)
+        if idx == len(self._vhashes):
+            idx = 0
+        return self._vhashes[idx]
+
+    def _closest_preceding(self, from_vh: int, target: int) -> int:
+        fingers = self._fingers[from_vh]
+        for entry in reversed(fingers):
+            f_vh = self._succ_vhash(entry.start)
+            if _in_open_interval(f_vh, from_vh, target):
+                return f_vh
+        return from_vh
+
+    def route(self, start_node: str, key: str) -> List[str]:
+        """Chord iterative lookup path from ``start_node`` to key's owner.
+
+        Returns the sequence of *physical* nodes contacted (including the
+        start and the final owner). Length is O(log m) w.h.p.
+        """
+        if start_node not in self.nodes:
+            raise KeyError(start_node)
+        target = stable_hash(key)
+        # A Chord node knows its predecessor: if the key falls in
+        # (pred, self] the lookup terminates locally with zero hops — the
+        # paper's gateway 'first checks if the key belongs to this edge
+        # group' (§5.4.1).
+        if self.successor(target) == start_node:
+            return [start_node]
+        cur = self.nodes[start_node][0]
+        path = [start_node]
+        # iterate until cur's successor owns target: target in (cur, succ]
+        for _ in range(2 * BITS):  # hard bound; lookup converges well before
+            succ = self._succ_vhash((cur + 1) % RING_SIZE)
+            if _in_open_interval(target, cur, succ) or target == succ:
+                owner = self._vowners[bisect.bisect_left(self._vhashes, succ)]
+                if path[-1] != owner:
+                    path.append(owner)
+                return path
+            nxt = self._closest_preceding(cur, target)
+            if nxt == cur:  # only our own fingers left -> successor owns it
+                owner = self._vowners[bisect.bisect_left(self._vhashes, succ)]
+                if path[-1] != owner:
+                    path.append(owner)
+                return path
+            cur = nxt
+            owner = self._vowners[bisect.bisect_left(self._vhashes, cur)]
+            if path[-1] != owner:
+                path.append(owner)
+        raise RuntimeError("chord lookup did not converge")
+
+    # ---------------------------------------------------------- utilities
+    def key_distribution(self, keys: Iterable[str]) -> Dict[str, int]:
+        counts = {n: 0 for n in self.nodes}
+        for k in keys:
+            counts[self.locate(k)] += 1
+        return counts
+
+    def moved_keys(self, keys: Sequence[str], other: "ChordRing") -> int:
+        """How many of ``keys`` map to a different owner in ``other``."""
+        return sum(1 for k in keys if self.locate(k) != other.locate(k))
+
+    def finger_table_size(self, node_id: str) -> int:
+        """Distinct routing-state entries held by ``node_id``.
+
+        Chord stores BITS fingers per vnode but most point at the same
+        successor — the *distinct* count is O(log m), which the tests
+        assert."""
+        return sum(
+            len({e.node for e in self._fingers[vh]})
+            for vh in self.nodes[node_id]
+        )
+
+    def preference_list(self, key: str, n: int) -> List[str]:
+        """First ``n`` distinct physical owners walking the ring clockwise
+        from the key's position — the replica set used by quorum
+        checkpointing (Dynamo-style preference list on Chord)."""
+        if not self._vhashes:
+            raise RuntimeError("empty ring")
+        idx = bisect.bisect_left(self._vhashes, stable_hash(key))
+        out: List[str] = []
+        total = len(self._vhashes)
+        for step in range(total):
+            owner = self._vowners[(idx + step) % total]
+            if owner not in out:
+                out.append(owner)
+                if len(out) == n:
+                    break
+        return out
+
+    def successor_group(self, node_id: str) -> str:
+        """First distinct physical node following ``node_id`` on the ring —
+        EdgeKV §7.3's static backup-group assignment rule."""
+        if len(self.nodes) < 2:
+            raise RuntimeError("need >= 2 nodes for a backup assignment")
+        vh = self.nodes[node_id][0]
+        idx = bisect.bisect_left(self._vhashes, vh)
+        n = len(self._vhashes)
+        for step in range(1, n + 1):
+            owner = self._vowners[(idx + step) % n]
+            if owner != node_id:
+                return owner
+        raise RuntimeError("unreachable")
+
+    def __len__(self) -> int:
+        return len(self.nodes)

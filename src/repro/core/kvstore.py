@@ -1,0 +1,225 @@
+"""EdgeKV storage module, edge groups, and the full cluster (EdgeKV §3.2).
+
+Composition (paper Fig. 2):
+
+* :class:`StorageModule` — per-node physical storage: **two separate
+  key-value stores**, a local one for group-level data and a global one for
+  system-level data (§3.2.5).
+* :class:`EdgeGroup` — a replicated state machine over ``n`` edge nodes
+  driven by :mod:`repro.core.raft`; a write completes at a majority quorum,
+  linearizable reads take a quorum round, serializable reads answer from
+  any member (§5.4.1).
+* :class:`EdgeKVCluster` — groups + gateway nodes + the Chord overlay
+  (:mod:`repro.core.hashring`) + the placement protocol and resource finder.
+
+This synchronous implementation is the *functional* truth of the system
+(used by unit/property tests and as the backing store of the framework
+features). The latency behaviour of the very same protocol objects is
+exercised by :mod:`repro.sim`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from .hashring import ChordRing
+from .raft import LocalCluster
+
+LOCAL, GLOBAL = "local", "global"
+_TOMBSTONE = object()
+
+
+class StorageModule:
+    """Physical storage on one edge node: separate local & global stores."""
+
+    def __init__(self) -> None:
+        self.stores: Dict[str, Dict[str, Any]] = {LOCAL: {}, GLOBAL: {}}
+
+    def apply(self, cmd: Tuple[str, str, str, Any]) -> None:
+        """State-machine apply for committed Raft entries."""
+        op, dtype, key, value = cmd
+        if op == "put":
+            self.stores[dtype][key] = value
+        elif op == "delete":
+            self.stores[dtype].pop(key, None)
+        else:  # pragma: no cover - guarded upstream
+            raise ValueError(f"unknown op {op!r}")
+
+    def get(self, dtype: str, key: str) -> Optional[Any]:
+        return self.stores[dtype].get(key)
+
+
+@dataclass
+class OpResult:
+    ok: bool
+    value: Any = None
+    # bookkeeping the simulator & tests use
+    quorum_size: int = 0
+    leader: Optional[str] = None
+
+
+class EdgeGroup:
+    """A Raft-replicated group of edge nodes (one RSM)."""
+
+    def __init__(self, group_id: str, node_ids: List[str], *, seed: int = 0):
+        self.id = group_id
+        self.node_ids = list(node_ids)
+        self.storage: Dict[str, StorageModule] = {
+            nid: StorageModule() for nid in node_ids}
+        self.learner_ids: List[str] = []
+        self._seed = seed
+        self.raft = LocalCluster(
+            node_ids,
+            apply_fns={nid: self.storage[nid].apply for nid in node_ids},
+            seed=seed,
+        )
+        self.reachable = True  # network-partition flag (§7.3 failover)
+
+    # -- §7.3: attach another group's nodes as non-voting learners
+    def attach_learners(self, learner_group: "EdgeGroup") -> None:
+        import random as _random
+        from .raft import RaftNode, stable_seed
+        for nid in learner_group.node_ids:
+            lid = f"{nid}@backup-of-{self.id}"
+            node = RaftNode(
+                lid, self.raft_ids() + [lid], voter=False,
+                apply_fn=learner_group.storage[nid].apply,
+                rng=_random.Random(self._seed * 31 + stable_seed(lid)),
+            )
+            node.voter_ids = set(self.node_ids)
+            self.raft.nodes[lid] = node
+            node.start(self.raft.now)
+            self.learner_ids.append(lid)
+        # existing nodes must know the new peer list to heartbeat learners
+        for nid in self.node_ids:
+            n = self.raft.nodes[nid]
+            n.peers = [p for p in self.raft.nodes if p != nid]
+
+    def raft_ids(self) -> List[str]:
+        return list(self.raft.nodes.keys())
+
+    @property
+    def n(self) -> int:
+        return len(self.node_ids)
+
+    def quorum(self) -> int:
+        return self.n // 2 + 1
+
+    # ------------------------------------------------------------ KV ops
+    def put(self, dtype: str, key: str, value: Any) -> OpResult:
+        lead = self.raft.run_until_leader()
+        self.raft.propose(("put", dtype, key, value))
+        return OpResult(True, quorum_size=self.quorum(), leader=lead.id)
+
+    def delete(self, dtype: str, key: str) -> OpResult:
+        lead = self.raft.run_until_leader()
+        self.raft.propose(("delete", dtype, key, None))
+        return OpResult(True, quorum_size=self.quorum(), leader=lead.id)
+
+    def get(self, dtype: str, key: str, *, linearizable: bool = True) -> OpResult:
+        if linearizable:
+            # etcd-style ReadIndex: the leader confirms leadership with a
+            # heartbeat quorum round, then answers from its state machine.
+            # LocalCluster.propose drives commits synchronously, so after the
+            # heartbeat round the leader's storage is current by definition.
+            lead = self.raft.run_until_leader()
+            self.raft.step(0.0)  # heartbeat/ack round = the quorum check
+            val = self.storage[lead.id].get(dtype, key)
+            return OpResult(True, value=val, quorum_size=self.quorum(),
+                            leader=lead.id)
+        # serializable: any member may answer (possibly stale)
+        member = self.node_ids[0]
+        return OpResult(True, value=self.storage[member].get(dtype, key),
+                        quorum_size=1, leader=None)
+
+    # -- fault injection used by tests
+    def crash_minority(self) -> List[str]:
+        k = (self.n - 1) // 2
+        victims = self.node_ids[-k:] if k else []
+        for v in victims:
+            self.raft.crash(v)
+        return victims
+
+    def crash_majority(self) -> List[str]:
+        k = self.quorum()
+        victims = self.node_ids[-k:]
+        for v in victims:
+            self.raft.crash(v)
+        self.reachable = False
+        return victims
+
+
+class GatewayNode:
+    """Gateway: DHT member + request router. Stores NO key-value data —
+    only routing state (finger tables live in the shared ChordRing) and,
+    optionally, a location cache (§7.2)."""
+
+    def __init__(self, gw_id: str, group: EdgeGroup, ring: ChordRing,
+                 cache_size: int = 0):
+        from .cache import LRUCache
+        self.id = gw_id
+        self.group = group
+        self.ring = ring
+        self.location_cache = LRUCache(cache_size) if cache_size else None
+        self.lookups = 0
+        self.cache_hits = 0
+
+    def locate(self, key: str) -> Tuple[str, List[str]]:
+        """Find the gateway responsible for ``key``; returns (owner, path)."""
+        if self.location_cache is not None:
+            hit = self.location_cache.get(key)
+            if hit is not None:
+                self.cache_hits += 1
+                return hit, [self.id, hit]
+        self.lookups += 1
+        path = self.ring.route(self.id, key)
+        owner = path[-1]
+        if self.location_cache is not None:
+            self.location_cache.put(key, owner)
+        return owner, path
+
+
+class EdgeKVCluster:
+    """The whole system: local layer (groups) + global layer (ring)."""
+
+    def __init__(self, group_sizes: List[int], *, virtual_nodes: int = 1,
+                 seed: int = 0, gateway_cache: int = 0,
+                 backup_groups: bool = False):
+        self.ring = ChordRing(virtual_nodes=virtual_nodes)
+        self.groups: Dict[str, EdgeGroup] = {}
+        self.gateways: Dict[str, GatewayNode] = {}
+        self.gateway_of_group: Dict[str, str] = {}
+        for gi, size in enumerate(group_sizes):
+            gid = f"g{gi}"
+            nodes = [f"{gid}-st{j}" for j in range(size)]
+            self.groups[gid] = EdgeGroup(gid, nodes, seed=seed + gi)
+            gw_id = f"gw{gi}"
+            self.ring.add_node(gw_id)
+            self.gateways[gw_id] = GatewayNode(
+                gw_id, self.groups[gid], self.ring, cache_size=gateway_cache)
+            self.gateway_of_group[gid] = gw_id
+        self.backup_of: Dict[str, str] = {}
+        if backup_groups and len(group_sizes) >= 2:
+            from .backup import assign_backup_groups
+            assign_backup_groups(self)
+
+    # ----------------------------------------------------- client interface
+    def _owner_group(self, key: str, via_gateway: str) -> Tuple[EdgeGroup, List[str]]:
+        gw = self.gateways[via_gateway]
+        owner_gw, path = gw.locate(key)
+        return self.gateways[owner_gw].group, path
+
+    def put(self, key: str, value: Any, dtype: str, *, client_group: str) -> OpResult:
+        """EdgeKV Algorithm 1 (placement) + Algorithm 2 (resource finder)."""
+        from .placement import placement
+        return placement(self, "put", key, value, dtype, client_group)
+
+    def get(self, key: str, dtype: str, *, client_group: str,
+            linearizable: bool = True) -> OpResult:
+        from .placement import placement
+        return placement(self, "get", key, None, dtype, client_group,
+                         linearizable=linearizable)
+
+    def delete(self, key: str, dtype: str, *, client_group: str) -> OpResult:
+        from .placement import placement
+        return placement(self, "delete", key, None, dtype, client_group)

@@ -1,0 +1,51 @@
+"""EdgeKV placement protocol — Algorithm 1 of the paper.
+
+``placement(key, value, type)``: *local* data is replicated inside the
+client's own edge group (via its Raft leader); *global* data is forwarded to
+the group's gateway node, whose resource finder (Algorithm 2) routes it over
+the Chord overlay to the responsible group.
+"""
+from __future__ import annotations
+
+from typing import Any, TYPE_CHECKING
+
+from .resource_finder import resource_get, resource_put, resource_delete
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .kvstore import EdgeKVCluster, OpResult
+
+LOCAL, GLOBAL = "local", "global"
+
+
+def placement(cluster: "EdgeKVCluster", op: str, key: str, value: Any,
+              dtype: str, client_group: str, *,
+              linearizable: bool = True) -> "OpResult":
+    """Algorithm 1. The client's edge node decides by data type.
+
+    Local ops never touch a gateway or the overlay; global ops go through
+    the local gateway's resource finder.
+    """
+    if dtype not in (LOCAL, GLOBAL):
+        raise ValueError(f"data type must be 'local' or 'global', got {dtype!r}")
+    group = cluster.groups[client_group]
+
+    if dtype == LOCAL:
+        # Lines 2-7: replicate inside the local group. EdgeGroup.put routes
+        # through the Raft leader exactly as `send(Leader, ...)` does.
+        if op == "put":
+            return group.put(LOCAL, key, value)
+        if op == "get":
+            return group.get(LOCAL, key, linearizable=linearizable)
+        if op == "delete":
+            return group.delete(LOCAL, key)
+        raise ValueError(op)
+
+    # Lines 8-10: global -> send to the group's gateway (resource finder).
+    gw = cluster.gateways[cluster.gateway_of_group[client_group]]
+    if op == "put":
+        return resource_put(cluster, gw, key, value)
+    if op == "get":
+        return resource_get(cluster, gw, key, linearizable=linearizable)
+    if op == "delete":
+        return resource_delete(cluster, gw, key)
+    raise ValueError(op)

@@ -1,0 +1,62 @@
+"""EdgeKV resource finder — Algorithm 2 of the paper.
+
+Runs on gateway nodes: hash the key, locate the responsible gateway on the
+Chord overlay, forward the request to that gateway's edge group, which
+performs the quorum operation through its replication manager.
+
+§7.3 failover rule: if the owner group is unreachable, **reads only** are
+served from its backup group (which tracks the owner as a non-voting Raft
+learner and may be slightly stale); writes fail until the owner returns, so
+the two groups' states can never diverge.
+"""
+from __future__ import annotations
+
+from typing import Any, TYPE_CHECKING
+
+from .kvstore import GLOBAL, OpResult
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .kvstore import EdgeKVCluster, GatewayNode
+
+
+def _owner(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str):
+    owner_gw_id, path = gw.locate(key)
+    return cluster.gateways[owner_gw_id].group, owner_gw_id, path
+
+
+def resource_put(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str,
+                 value: Any) -> OpResult:
+    group, owner_gw, path = _owner(cluster, gw, key)
+    if not group.reachable:
+        return OpResult(False, value=None, leader=None)  # writes must fail over partition
+    res = group.put(GLOBAL, key, value)
+    res.dht_path = path  # type: ignore[attr-defined]
+    return res
+
+
+def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
+                 linearizable: bool = True) -> OpResult:
+    group, owner_gw, path = _owner(cluster, gw, key)
+    if not group.reachable:
+        backup_gid = cluster.backup_of.get(group.id)
+        if backup_gid is None:
+            return OpResult(False)
+        # §7.3: backup serves READS ONLY, possibly stale -> serializable.
+        backup = cluster.groups[backup_gid]
+        res = backup.get(GLOBAL, key, linearizable=False)
+        res.from_backup = True  # type: ignore[attr-defined]
+        res.dht_path = path  # type: ignore[attr-defined]
+        return res
+    res = group.get(GLOBAL, key, linearizable=linearizable)
+    res.dht_path = path  # type: ignore[attr-defined]
+    return res
+
+
+def resource_delete(cluster: "EdgeKVCluster", gw: "GatewayNode",
+                    key: str) -> OpResult:
+    group, owner_gw, path = _owner(cluster, gw, key)
+    if not group.reachable:
+        return OpResult(False)
+    res = group.delete(GLOBAL, key)
+    res.dht_path = path  # type: ignore[attr-defined]
+    return res

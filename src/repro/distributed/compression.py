@@ -1,0 +1,69 @@
+"""Error-feedback int8 gradient compression for the cross-pod axis.
+
+Cross-pod ICI/DCN links are the scarcest bandwidth at 1000+-node scale;
+int8 quantization cuts gradient all-reduce wire bytes 2x vs bf16 (4x vs
+f32) and the error-feedback accumulator keeps the *long-run* update
+unbiased (the quantization residual is replayed into the next step, so
+errors do not accumulate — tested as a contraction property).
+
+Composition: ``compressed_psum_shardmap`` shows the jax-native pattern
+(quantize -> all_gather int8 -> local dequant-reduce) inside shard_map;
+the train loop enables it via ``--compress-pod-grads``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grad: jax.Array, residual: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback step: compress (grad + residual); the new residual
+    is whatever the quantizer dropped."""
+    target = grad.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    sent = dequantize_int8(q, scale)
+    new_residual = target - sent
+    return q, scale, new_residual
+
+
+def ef_compress_tree(grads, residuals):
+    """Tree version; returns (dequantized_grads, new_residuals). The
+    dequantized values are what the cross-pod all-reduce would carry."""
+    qs = jax.tree.map(lambda g, r: ef_compress(g, r), grads, residuals)
+    sent = jax.tree.map(
+        lambda t: dequantize_int8(t[0], t[1]).astype(jnp.float32), qs,
+        is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[2], qs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return sent, new_res
+
+
+def init_residuals(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Inside shard_map: int8 all-gather + local dequant-reduce.
+    Wire bytes: N*size int8 vs 2*(N-1)/N*size*4 for a ring f32 all-reduce."""
+    q, scale = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (N, ...) int8 on wire
+    sg = jax.lax.all_gather(scale, axis_name)      # (N,) f32 (tiny)
+    return jnp.tensordot(sg, qg.astype(jnp.float32), axes=(0, 0))

@@ -1,0 +1,195 @@
+"""Sharding rules: map every param / input / cache dim onto the mesh.
+
+Mesh axes: ``(pod, data, model)`` multi-pod or ``(data, model)`` single-pod.
+``model`` carries TP (attention heads, ffn hidden, vocab) and EP (expert
+dim, when it divides); ``data`` (+``pod``) carries batch and — with
+``fsdp=True`` — a ZeRO-3-style extra shard of every large weight, which the
+layer scan all-gathers per layer and the backward reduce-scatters.
+
+All assignments are divisibility-checked against the mesh: a dim that
+doesn't divide falls back to the next candidate or replication, so every
+(arch x shape x mesh) cell lowers without manual per-arch tables. The
+chosen spec trees are an input to the roofline's analytic collective model.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _assign(shape: Sequence[int], mesh: Mesh,
+            prefs: Sequence[Tuple[int, Any]]) -> P:
+    """Build a PartitionSpec from (dim_index, axis) preferences, skipping
+    any assignment that doesn't divide or whose dim is already taken."""
+    spec: list = [None] * len(shape)
+    used = set()
+    for di, ax in prefs:
+        if di < 0:
+            di += len(shape)
+        if di >= len(shape) or spec[di] is not None:
+            continue
+        key = tuple(ax) if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in key):
+            continue
+        if _fits(shape[di], mesh, ax):
+            spec[di] = ax
+            used.update(key)
+    return P(*spec)
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh, *,
+                fsdp: bool = False):
+    """PartitionSpec pytree matching an (eval_shape'd) param tree."""
+    fs = "data" if fsdp else None
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        stacked = 1 if re.search(r"layers", name) else 0
+
+        def pref(*prefs):
+            return _assign(shape, mesh, prefs)
+
+        if "embed" in name:
+            return pref((0, "model"), (1, fs))
+        if "lm_head" in name:
+            return pref((1, "model"), (0, fs))
+        if re.search(r"attn/(wq|wk|wv)$", name):
+            return pref((-1, "model"), (-2, fs))
+        if re.search(r"attn/wo$", name):
+            return pref((-2, "model"), (-1, fs))
+        if re.search(r"(mlp|dense)/(w_gate|w_up)$", name):
+            return pref((-1, "model"), (-2, fs))
+        if re.search(r"(mlp|dense)/w_down$", name):
+            return pref((-2, "model"), (-1, fs))
+        if "router" in name:
+            return pref((-2, fs))
+        if "experts" in name:
+            # (L, E, D, F): EP on expert dim if it divides, else TP on F
+            E = shape[stacked]
+            if _fits(E, mesh, "model"):
+                if re.search(r"w_down$", name):
+                    return pref((stacked, "model"), (-2, fs))
+                return pref((stacked, "model"), (-1, fs))
+            if re.search(r"w_down$", name):
+                return pref((-2, "model"), (-1, fs))
+            return pref((-1, "model"), (-2, fs))
+        if "mamba" in name:
+            if "in_proj" in name or "out_proj" in name:
+                # packed projection dims don't split cleanly on 'model'
+                # (z|x|B|C|dt boundaries) -> FSDP only; see DESIGN.md §6
+                return pref((-2, fs), (-1, fs))
+            return P(*([None] * len(shape)))
+        if re.search(r"(mlstm|slstm)/", name):
+            return pref((-1, fs))
+        # norms, biases, scalars
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_specs(param_spec_tree, opt_state_shape, mesh: Mesh):
+    """Optimizer state inherits its param's spec. Factored Adafactor
+    leaves (vr/vc) keep the surviving dims' assignments; anything that no
+    longer divides falls back to replication."""
+
+    def rule(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if keys and keys[-1] == "count":
+            return P()
+        core = [k for k in keys if k not in ("m", "v", "f", "vr", "vc")]
+        node = param_spec_tree
+        try:
+            for k in core:
+                node = node[int(k)] if isinstance(node, (list, tuple)) \
+                    else node[k]
+        except (KeyError, IndexError, ValueError, TypeError):
+            return P(*([None] * len(leaf.shape)))
+        if not isinstance(node, P):
+            return P(*([None] * len(leaf.shape)))
+        base = list(node) + [None] * (len(leaf.shape) + 1 - len(node))
+        if keys[-1] == "vr":      # param (..., a, b) -> mean over b
+            spec = base[:len(leaf.shape)]
+        elif keys[-1] == "vc":    # param (..., a, b) -> mean over a
+            spec = base[:len(leaf.shape) - 1] + [base[len(leaf.shape)]]
+        else:                     # m / v: same rank as param
+            spec = base[:len(leaf.shape)]
+        spec = [ax if ax is not None and d % axis_size(mesh, ax) == 0
+                else None for d, ax in zip(leaf.shape, spec)]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, opt_state_shape)
+
+
+def batch_specs(cfg: ArchConfig, batch_shape, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        if _fits(shape[0], mesh, ba):
+            return P(*((ba,) + (None,) * (len(shape) - 1)))
+        if len(ba) > 1 and _fits(shape[0], mesh, ba[-1]):
+            return P(*((ba[-1],) + (None,) * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, mesh: Mesh):
+    """Decode-cache sharding: batch on data axes; per-layer tensors pick
+    heads ('model') when the (padded) KV head count divides, else the
+    sequence dim (sequence-parallel decode attention)."""
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if not shape:
+            return P()
+        if name in ("k", "v", "ak", "av", "xk", "xv", "ks", "vs"):
+            # (L, B, S, K, hd): batch -> kv heads -> sequence; unsharded
+            # batch (long_500k B=1) lets sequence take the data axes
+            return _assign(shape, mesh,
+                           [(1, ba), (3, "model"), (2, "model"), (2, ba)])
+        if name == "conv":        # (L, B, ck-1, C)
+            return _assign(shape, mesh, [(1, ba), (3, "model")])
+        if name == "ssm":         # (L, B, H, N, P)
+            return _assign(shape, mesh, [(1, ba), (2, "model")])
+        if name.startswith("m_"):  # (Lm, B*nh, 1, hd, hd')
+            return _assign(shape, mesh, [(1, ba)])
+        if name.startswith("s_"):  # (Ls, B, D)
+            return _assign(shape, mesh, [(1, ba), (2, "model")])
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

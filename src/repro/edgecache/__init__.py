@@ -1,0 +1,6 @@
+"""EdgeKV-backed serving state: two-tier paged KV cache + expert placement."""
+from .pages import PagePoolManager, PageRef, content_key
+from .experts import expert_placement, apply_expert_permutation
+
+__all__ = ["PagePoolManager", "PageRef", "content_key",
+           "expert_placement", "apply_expert_permutation"]

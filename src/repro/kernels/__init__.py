@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle):
+
+* flash_attention — prefill/train attention (online softmax, causal
+  block-skip grid).
+* paged_attention — decode attention through the EdgeKV two-tier page
+  table (scalar-prefetch gather; the paper's storage module on TPU).
+* ssm_scan — Mamba2/mLSTM chunked SSD with VMEM state carry.
+
+Validated in interpret mode on CPU (tests/test_kernels_*.py); ops.py
+dispatches to the jnp path off-TPU.
+"""
+from .flash_attention import flash_attention
+from .paged_attention import paged_attention
+from .ssm_scan import ssm_scan
+
+__all__ = ["flash_attention", "paged_attention", "ssm_scan"]

@@ -1,0 +1,6 @@
+from .ops import flash_attention
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_kernel",
+           "flash_attention_ref"]

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (prefill/train path).
+
+TPU-native tiling: the grid walks (batch*kv_head, q_blocks, kv_blocks);
+each step pulls a (block_q x hd) Q tile and (block_k x hd) K/V tiles into
+VMEM via BlockSpec index maps, runs the online-softmax update on the MXU
+(block_q/block_k multiples of 128 keep the systolic array full), and
+carries (m, l, acc) in VMEM scratch across the kv_block dimension.
+
+Causal block skipping: fully-future KV blocks contribute nothing; the
+kernel early-outs on them with @pl.when — the jnp oracle can't skip, which
+is exactly the compute-term adjustment discussed in DESIGN.md §7.
+
+GQA layout: heads are pre-folded into the leading dim by ops.py, so one
+kernel instance serves one (batch, head) pair.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[...].astype(jnp.float32)          # (block_q, hd)
+        k = k_ref[...].astype(jnp.float32)          # (block_k, hd)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask                # re-mask exp(0) rows
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # block-level reachability: skip fully-masked tiles entirely
+    if causal or window:
+        run = jnp.asarray(True)
+        if causal:
+            run &= k_start <= q_start + block_q - 1
+        if window:
+            run &= k_start + block_k - 1 > q_start - window
+        pl.when(run)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           seq_q: int = 0, seq_k: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd) — heads pre-folded into batch.
+    Sq/Skv must be padded to block multiples; ``seq_q``/``seq_k`` give the
+    true lengths for masking (default: the padded ones)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q,
+                                                      block_k)
+    seq_q = seq_q or Sq
+    seq_k = seq_k or Skv
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, Sq // block_q, Skv // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_q=seq_q, seq_k=seq_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd),
+                               lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

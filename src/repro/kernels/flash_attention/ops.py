@@ -1,0 +1,54 @@
+"""Jit'd public wrapper: GQA layout handling, padding, backend dispatch.
+
+On TPU this calls the Pallas kernel; elsewhere (CPU dry-run, tests without
+interpret) it falls back to the chunked-jnp path in
+``repro.models.attention`` which computes identical math.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "use_pallas", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    use_pallas: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd). Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    # fold heads: q -> (B*K*G, Sq, hd); kv repeated per group
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, Skv, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, Skv, hd)
+    if not use_pallas:
+        out = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        qp = _pad_to(qf, block_q, 1)
+        kp = _pad_to(kf, block_k, 1)
+        vp = _pad_to(vf, block_k, 1)
+        out = flash_attention_kernel(
+            qp, kp, vp, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, seq_q=Sq, seq_k=Skv, interpret=interpret)
+        out = out[:, :Sq]
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

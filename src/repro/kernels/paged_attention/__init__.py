@@ -1,0 +1,6 @@
+from .ops import paged_attention
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_kernel",
+           "paged_attention_ref"]

@@ -1,0 +1,109 @@
+"""Pallas TPU paged decode attention — the EdgeKV storage module on TPU.
+
+One query token per sequence attends over KV held in fixed-size *pages*
+scattered through a pool in HBM (the two-tier EdgeKV cache: local pages +
+ring-placed global pages are resolved to pool slots by
+``repro.edgecache``). The page table rides in as a **scalar-prefetch**
+operand, so each grid step's BlockSpec index_map dereferences
+``pt[b, page]`` to pull exactly that page's (page_size x hd) K/V tile
+HBM->VMEM — gather happens in the memory system, never materialized.
+
+Grid: (batch, kv_head, pages). Online softmax across the page dimension
+in VMEM scratch, all G grouped query heads of the kv head in one step
+(G x page_size score tile on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = len_ref[b]
+    valid = p * page_size < seq_len
+
+    @pl.when(valid)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)           # (G, hd)
+        k = k_ref[...].astype(jnp.float32)           # (page, hd)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < seq_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        pexp = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, K, G, hd); pools: (K, N_pages, page_size, hd);
+    page_table: (B, P_max) int32 pool slots; lengths: (B,) int32.
+    Returns (B, K, G, hd)."""
+    B, K, G, hd = q.shape
+    _, N, page_size, _ = k_pages.shape
+    P_max = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, P_max),
+        in_specs=[
+            pl.BlockSpec((None, None, G, hd),
+                         lambda b, h, p, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, page_size, hd),
+                         lambda b, h, p, pt, ln: (h, pt[b, p], 0, 0)),
+            pl.BlockSpec((None, None, page_size, hd),
+                         lambda b, h, p, pt, ln: (h, pt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, p, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

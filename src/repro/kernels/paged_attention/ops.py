@@ -1,0 +1,29 @@
+"""Jit'd wrapper for paged decode attention with backend dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    use_pallas: bool = True, interpret: bool = False):
+    """q: (B, H, hd) single-token queries; pools (K, N, page, hd);
+    page_table (B, P) int32; lengths (B,). Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    K = k_pages.shape[0]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    if use_pallas:
+        out = paged_attention_kernel(qg, k_pages, v_pages,
+                                     page_table.astype(jnp.int32),
+                                     lengths.astype(jnp.int32),
+                                     interpret=interpret)
+    else:
+        out = paged_attention_ref(qg, k_pages, v_pages, page_table, lengths)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention: materialize the gather."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Same shapes as the kernel. Gathers pages then runs masked attention."""
+    B, K, G, hd = q.shape
+    _, N, page_size, _ = k_pages.shape
+    P_max = page_table.shape[1]
+    # gather: (B, K, P_max, page, hd) -> (B, K, S, hd)
+    k = k_pages[:, page_table]               # (K, B, P, page, hd)
+    v = v_pages[:, page_table]
+    k = jnp.moveaxis(k, 1, 0).reshape(B, K, P_max * page_size, hd)
+    v = jnp.moveaxis(v, 1, 0).reshape(B, K, P_max * page_size, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(P_max * page_size)
+    mask = pos[None, :] < lengths[:, None]   # (B, S)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    return jnp.einsum("bkgs,bksd->bkgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import ssm_scan
+from .kernel import ssm_scan_kernel
+from .ref import ssm_scan_ref
+
+__all__ = ["ssm_scan", "ssm_scan_kernel", "ssm_scan_ref"]

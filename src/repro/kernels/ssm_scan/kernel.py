@@ -1,0 +1,88 @@
+"""Pallas TPU chunked SSD scan (Mamba2 / mLSTM sequence mixing).
+
+Heads are folded into the leading grid dim; the grid's chunk dimension is
+*sequential*: a (N x P) state tile lives in VMEM scratch and is carried
+chunk to chunk (TPU grid iteration order is row-major, so (bh, c) runs all
+chunks of one head consecutively — the carry is private to each bh row).
+
+Per chunk (all 2D ops, MXU-shaped):
+  cum   = cumsum(log a)                              (Q, 1)
+  inter = (C @ h_prev) * exp(cum)                    (Q, P)
+  M     = (C @ B^T) . exp(cum_t - cum_s) . tril      (Q, Q)
+  intra = M @ (x * dt)                               (Q, P)
+  h     = h_prev * exp(cum_Q) + B^T @ (x*dt*exp(cum_Q - cum))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (Q, P)
+    la = la_ref[...].astype(jnp.float32)      # (Q, 1)
+    dt = dt_ref[...].astype(jnp.float32)      # (Q, 1)
+    Bm = b_ref[...].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)       # (Q, N)
+
+    cum = jnp.cumsum(la, axis=0)              # (Q, 1)
+    xw = x * dt                               # (Q, P)
+    h = h_ref[...]                            # (N, P)
+
+    # inter-chunk contribution
+    y_inter = jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(cum)
+
+    # intra-chunk masked decay attention
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    dd = cum - cum.reshape(1, -1)             # cum_t - cum_s, (Q, Q)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, CB.shape, 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, CB.shape, 1)
+    M = CB * jnp.exp(dd) * (s_idx <= t_idx)
+    y_intra = jax.lax.dot_general(M, xw, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[...] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update
+    tail = jnp.exp(cum[-1:] - cum)            # (Q, 1)
+    h_new = h * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        Bm, xw * tail, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+
+
+def ssm_scan_kernel(x: jax.Array, loga: jax.Array, dt: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """x: (BH, S, P); loga/dt: (BH, S, 1); Bm/Cm: (BH, S, N).
+    S must divide by chunk. Returns y: (BH, S, P)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    blk = lambda d: pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk(P), blk(1), blk(1), blk(N), blk(N)],
+        out_specs=blk(P),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, loga, dt, Bm, Cm)

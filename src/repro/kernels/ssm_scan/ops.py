@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+from .kernel import ssm_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssm_scan(x, loga, dt, Bm, Cm, *, chunk: int = 128,
+             use_pallas: bool = True, interpret: bool = False):
+    """Head-folded chunked SSD. x (BH,S,P), loga/dt (BH,S,1), B/C (BH,S,N).
+    Falls back to the chunked-jnp path off-TPU."""
+    if use_pallas:
+        return ssm_scan_kernel(x, loga, dt, Bm, Cm, chunk=chunk,
+                               interpret=interpret)
+    y, _ = ssd_chunked(x[:, :, None, :], loga, dt, Bm, Cm,
+                       chunk=min(chunk, x.shape[1]))
+    return y[:, :, 0, :]

@@ -1,0 +1,15 @@
+"""Oracle: the models.ssm sequential reference, head-folded layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_ref
+
+
+def ssm_scan_ref(x, loga, dt, Bm, Cm):
+    """x: (BH, S, P); loga/dt: (BH, S, 1); Bm/Cm: (BH, S, N)."""
+    BH, S, P = x.shape
+    xf = x[:, :, None, :]                       # (BH, S, 1, P)
+    y, _ = ssd_ref(xf, loga, dt, Bm, Cm)
+    return y[:, :, 0, :]

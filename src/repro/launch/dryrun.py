@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input shape)
+on the production meshes, and dump the roofline inputs.
+
+MUST be the process entry point (the XLA_FLAGS line above runs before any
+jax import — jax locks the device count on first init). Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh single,multi \
+      --out benchmarks/dryrun_results
+
+Per cell it records: lowering+compile wall time, per-device
+``cost_analysis`` (FLOPs / bytes), ``memory_analysis`` when the backend
+provides it, exact per-device argument bytes (computed from the sharding
+trees), and the compiled HLO's collective inventory (op kind, result
+bytes, group size, loop-body trip multiplier) for §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, supports_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_specs
+from repro.distributed.sharding import axis_size
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\].*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+TRIP_RE = re.compile(r'known_trip_count.....n...(\d+)')
+GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8,
+               "f64": 8, "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+               "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8}
+
+
+def parse_collectives(hlo: str, default_trip: int):
+    """Inventory collectives; multiply those inside while-loop bodies by
+    the loop trip count (parsed from backend_config when present, else the
+    layer count heuristic — documented in DESIGN.md §7)."""
+    # map computation name -> trip count for known while bodies
+    body_trips = {}
+    for m in re.finditer(r"body=%?([\w.\-]+)", hlo):
+        body_trips.setdefault(m.group(1), default_trip)
+    # refine with known_trip_count: find while lines
+    for m in re.finditer(
+            r"while\(.*?\).*?body=%?([\w.\-]+).*?$", hlo, re.M):
+        line = m.group(0)
+        t = TRIP_RE.search(line)
+        if t:
+            body_trips[m.group(1)] = int(t.group(1))
+
+    out = []
+    current_comp = "ENTRY"
+    for line in hlo.splitlines():
+        comp = re.match(r"\s*%?([\w.\-]+)\s*\([\w\s.,%\[\]:]*\)\s*->.*{", line)
+        if line.startswith("ENTRY"):
+            current_comp = "ENTRY"
+            continue
+        if comp and "=" not in line:
+            current_comp = comp.group(1)
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        size = int(np.prod([int(d) for d in dims.split(",") if d])) \
+            if dims else 1
+        nbytes = size * DTYPE_BYTES.get(dtype, 4)
+        gsize = 0
+        g = GROUPS_RE.search(line)
+        if g:
+            gsize = len(g.group(1).split(","))
+        else:
+            g2 = GROUPS2_RE.search(line)
+            if g2:
+                gsize = int(g2.group(2))
+        trip = body_trips.get(current_comp, 1) if current_comp != "ENTRY" \
+            else 1
+        out.append({"kind": kind, "result_bytes": nbytes, "group": gsize,
+                    "trip": trip, "comp": current_comp})
+    return out
+
+
+def wire_bytes(entry) -> float:
+    """Ring-algorithm wire bytes per device for one collective."""
+    R, n = entry["result_bytes"], max(entry["group"], 2)
+    k = entry["kind"]
+    f = (n - 1) / n
+    if k == "all-reduce":
+        w = 2 * R * f
+    elif k == "all-gather":
+        w = R * f                   # result is the gathered (full) buffer
+    elif k == "reduce-scatter":
+        w = R * (n - 1)             # result is the 1/n shard
+    elif k == "all-to-all":
+        w = R * f
+    else:                           # collective-permute
+        w = R
+    return w * entry["trip"]
+
+
+def arg_bytes_per_device(args, in_specs, mesh) -> int:
+    """Exact per-device bytes of all step arguments from the spec trees
+    (works even when the backend's memory_analysis is unavailable)."""
+    from jax.sharding import PartitionSpec as P
+    total = 0
+    flat_a = jax.tree.leaves(args)
+    flat_s = jax.tree.leaves(in_specs, is_leaf=lambda x: isinstance(x, P))
+    for a, s in zip(flat_a, flat_s):
+        shards = 1
+        if isinstance(s, P):
+            for d, ax in zip(a.shape, tuple(s) + (None,) * len(a.shape)):
+                if ax is not None:
+                    shards *= axis_size(mesh, ax)
+        total += int(np.prod(a.shape)) * a.dtype.itemsize // shards
+    return total
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: Path, overrides=None, tag="baseline",
+             keep_hlo: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__{tag}" if tag != "baseline" else "")
+    out_path = out_dir / f"{cell_id}.json"
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": why}
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[SKIP] {cell_id}: {why}")
+        return rec
+
+    t0 = time.time()
+    try:
+        plan = cell_specs(cfg, shape, mesh, overrides)
+        from repro.distributed.sharding import to_shardings
+        in_sh = to_shardings(mesh, plan.in_specs)
+        out_sh = (to_shardings(mesh, plan.out_specs)
+                  if plan.out_specs is not None else None)
+        with mesh:
+            jitted = jax.jit(plan.step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=plan.donate)
+            lowered = jitted.lower(*plan.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = dict(compiled.cost_analysis() or {})
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # backend may not support it
+            mem_d = {"error": str(e)}
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo, default_trip=cfg.n_layers)
+        rec = {
+            "cell": cell_id, "status": "ok",
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "tag": tag,
+            "devices": int(np.prod(list(mesh.shape.values()))),
+            "options": plan.meta["options"], "kind": plan.meta["kind"],
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "flops_per_device": float(cost.get("flops", -1)),
+            "bytes_per_device": float(cost.get("bytes accessed", -1)),
+            "cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+            "memory_analysis": mem_d,
+            "arg_bytes_per_device": arg_bytes_per_device(
+                plan.args, plan.in_specs, mesh),
+            "collectives": colls,
+            "collective_wire_bytes_per_device": sum(
+                wire_bytes(c) for c in colls),
+            "hlo_bytes": len(hlo),
+        }
+        if keep_hlo:
+            (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[OK]   {cell_id}: compile={t_compile:.1f}s "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll={rec['collective_wire_bytes_per_device']:.3e}B")
+        return rec
+    except Exception as e:
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:],
+               "elapsed_s": round(time.time() - t0, 1)}
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[FAIL] {cell_id}: {type(e).__name__}: {str(e)[:200]}")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--overrides", default="",
+                    help="json dict, e.g. '{\"dispatch\":\"sort\"}'")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    meshes = {}
+    for m in args.mesh.split(","):
+        meshes[m] = make_production_mesh(multi_pod=(m == "multi"))
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mname, mesh in meshes.items():
+                cell_id = f"{arch}__{shape}__{mname}" + (
+                    f"__{args.tag}" if args.tag != "baseline" else "")
+                if args.skip_existing and (out_dir / f"{cell_id}.json"
+                                           ).exists():
+                    continue
+                rec = run_cell(arch, shape, mesh, mname, out_dir,
+                               overrides, args.tag, args.keep_hlo)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_fail += st == "error"
+                n_skip += st == "skipped"
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed, "
+          f"{n_skip} skipped (documented)")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving launcher: batched requests through the EdgeKV two-tier page
+cache. ``python -m repro.launch.serve --arch stablelm-3b --reduced``.
+
+Flow per batch: shared system prefixes register as *global* pages
+(content-hashed, deduplicated, ring-placed); each sequence's own context
+becomes *local* pages; prefill builds the KV, then tokens decode step by
+step. The page-pool stats printed at the end show the EdgeKV dedup win.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--shared-prefix-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.core.hashring import ChordRing
+    from repro.edgecache import PagePoolManager
+    from repro.models import init_params, prefill, decode_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # EdgeKV control plane: 4 serving groups on a ring; we are g0
+    ring = ChordRing(virtual_nodes=8)
+    for g in range(4):
+        ring.add_node(f"g{g}")
+    pool = PagePoolManager("g0", 4096, args.page_size, ring)
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, args.shared_prefix_len,
+                          dtype=np.int32)
+    B = args.requests
+    prompts = np.concatenate(
+        [np.tile(shared, (B, 1)),
+         rng.integers(1, cfg.vocab_size,
+                      (B, args.prompt_len - args.shared_prefix_len),
+                      dtype=np.int32)], axis=1)
+
+    # control plane: register pages (dedup happens here)
+    for i in range(B):
+        pool.register_global(f"req{i}", shared)
+        n_local = (args.prompt_len - args.shared_prefix_len
+                   + args.gen_len + args.page_size - 1) // args.page_size
+        pool.alloc_local(f"req{i}", n_local)
+
+    t0 = time.time()
+    max_len = args.prompt_len + args.gen_len
+    logits, cache = prefill(params, cfg, jnp.asarray(prompts),
+                            max_len=max_len, chunk=64)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+    tok = tok.astype(jnp.int32)
+    generated = [tok]
+    for _ in range(args.gen_len - 1):
+        lg, cache = decode_step(params, cfg, cache, tok)
+        tok = jnp.argmax(lg[:, :cfg.vocab_size], -1)[:, None].astype(
+            jnp.int32)
+        generated.append(tok)
+    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
+    dt = time.time() - t0
+
+    print(f"served {B} requests x {args.gen_len} tokens "
+          f"in {dt:.2f}s ({B*args.gen_len/dt:.1f} tok/s)")
+    print(f"generated[0]: {out[0].tolist()}")
+    s = pool.stats
+    print(f"edgekv pages: dedup_hits={s['dedup_hits']} "
+          f"remote_fetches={s['remote_fetch']} "
+          f"slots_used={pool.used_slots} "
+          f"(shared prefix stored once for {B} requests)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every dry-run cell.
+
+``cell_specs(arch, shape, mesh)`` returns everything needed to lower a
+step function without allocating a single model byte — the shannon/kernels
+pattern: weak-type-correct, shardable structs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, AUDIO
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        opt_state_specs, param_specs,
+                                        batch_axes, axis_size)
+from repro.models import init_params, init_cache
+from repro.optim import for_arch
+from repro.train.steps import make_train_step, make_prefill_step, \
+    make_decode_step
+
+BF16 = jnp.bfloat16
+
+
+@dataclass
+class CellPlan:
+    step_fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStruct pytrees
+    in_specs: Tuple[Any, ...]      # PartitionSpec pytrees
+    out_specs: Any
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one cell (assignment step 2)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    S_tok = S - (cfg.frontend_tokens or 0)
+    d: Dict[str, Any] = {"tokens": sds((B, S_tok), jnp.int32)}
+    if shape.kind == "train":
+        d["labels"] = sds((B, S_tok), jnp.int32)
+    if cfg.family == AUDIO:
+        d["enc_frames"] = sds((B, S, cfg.d_model), BF16)
+    if cfg.frontend_tokens:
+        d["prefix_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), BF16)
+    return d
+
+
+def _params_struct(cfg: ArchConfig, mesh: Mesh, pad_kv: bool = False):
+    tp = mesh.shape["model"]
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=BF16, tp=tp, pad_kv=pad_kv),
+        sds((2,), jnp.uint32))
+
+
+def _options(cfg: ArchConfig, overrides: Optional[dict] = None) -> dict:
+    n = cfg.param_count()
+    opts = {
+        "fsdp": n >= 10e9,
+        "remat": n >= 10e9,
+        "dispatch": "einsum",
+        "chunk": 1024,
+        "pad_kv": False,
+        "kv_dtype": None,
+        "capacity_factor": None,
+    }
+    opts.update(overrides or {})
+    return opts
+
+
+def cell_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               overrides: Optional[dict] = None) -> CellPlan:
+    opts = _options(cfg, overrides)
+    if opts.get("capacity_factor"):
+        from dataclasses import replace as _replace
+        cfg = _replace(cfg, capacity_factor=float(opts["capacity_factor"]))
+    params = _params_struct(cfg, mesh, pad_kv=opts["pad_kv"])
+    p_spec = param_specs(cfg, params, mesh, fsdp=opts["fsdp"])
+    batch = input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, batch, mesh)
+    meta = {"options": opts, "kind": shape.kind}
+
+    if shape.kind == "train":
+        step, opt = make_train_step(cfg, dispatch=opts["dispatch"],
+                                    remat=opts["remat"],
+                                    chunk=opts["chunk"])
+        opt_state = jax.eval_shape(opt.init, params)
+        o_spec = opt_state_specs(p_spec, opt_state, mesh)
+        return CellPlan(
+            step_fn=step,
+            args=(params, opt_state, batch),
+            in_specs=(p_spec, o_spec, b_spec),
+            out_specs=(p_spec, o_spec, None),
+            donate=(0, 1),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, dispatch=opts["dispatch"],
+                                 max_len=shape.seq_len, chunk=opts["chunk"])
+        return CellPlan(
+            step_fn=step,
+            args=(params, batch),
+            in_specs=(p_spec, b_spec),
+            out_specs=None,
+            donate=(),
+            meta=meta,
+        )
+
+    # decode: one token against a cache of seq_len
+    step = make_decode_step(cfg, dispatch=opts["dispatch"])
+    enc_len = shape.seq_len if cfg.family == AUDIO else 0
+    cache = jax.eval_shape(
+        partial(init_cache, params, cfg, shape.global_batch, shape.seq_len,
+                BF16, enc_len=enc_len, kv_dtype=opts["kv_dtype"]))
+    c_spec = cache_specs(cfg, cache, mesh)
+    tokens = batch["tokens"]
+    t_spec = batch_specs(cfg, {"tokens": tokens}, mesh)["tokens"]
+    ba = batch_axes(mesh)
+    logits_spec = None  # let SPMD choose; cache must round-trip
+    return CellPlan(
+        step_fn=step,
+        args=(params, cache, tokens),
+        in_specs=(p_spec, c_spec, t_spec),
+        out_specs=(logits_spec, c_spec),
+        donate=(1,),
+        meta=meta,
+    )

@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from .model import (init_params, forward_train, model_dims, ModelDims,
+                    dims_from_params, param_count_tree)
+from .serving import init_cache, prefill, decode_step, cache_len_for
+
+__all__ = [
+    "init_params", "forward_train", "model_dims", "ModelDims",
+    "dims_from_params", "param_count_tree", "init_cache", "prefill",
+    "decode_step", "cache_len_for",
+]

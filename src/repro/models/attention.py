@@ -1,0 +1,193 @@
+"""GQA attention: chunked online-softmax (flash-style) in pure JAX.
+
+The prefill/train path never materializes the (S x S) score matrix — it
+scans over KV chunks carrying (max, sum, acc), exactly the algorithm the
+Pallas ``kernels/flash_attention`` implements with VMEM tiling on TPU.
+The jnp version is the dry-run/CPU path and the kernel's oracle.
+
+Supports causal masking, sliding windows (mixtral), query offsets
+(decode/chunked prefill), and separate KV sequences (cross-attention).
+
+NOTE on HLO FLOPs: block-skipping for fully-masked (future) KV chunks is
+shape-dynamic and is done by the Pallas kernel's grid, not by this jnp
+path — so compiled HLO carries ~2x the minimal causal-attention FLOPs.
+benchmarks/roofline.py reports both raw-HLO and kernel-adjusted numbers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, hd: int, dtype,
+              prefix_shape: Tuple[int, ...] = ()) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (*prefix_shape, d_model, n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (*prefix_shape, d_model, n_kv * hd), dtype),
+        "wv": dense_init(ks[2], (*prefix_shape, d_model, n_kv * hd), dtype),
+        "wo": dense_init(ks[3], (*prefix_shape, n_heads * hd, d_model), dtype),
+    }
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset=0, kv_len: Optional[jax.Array] = None,
+                  chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); H % K == 0.
+
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    ``kv_len``: optional dynamic number of valid KV entries (decode cache).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, Sq, K, G, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    chunk = min(chunk, Skv)
+    n_chunks = Skv // chunk
+    rem = Skv - n_chunks * chunk
+
+    def block(carry, kc, vc, kv_pos):
+        m, l, acc = carry
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qr, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, kc.shape[1]), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= (kv_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # mask again after the shift: a fully-masked row has s == m_new ==
+        # NEG_INF and exp(0) would wrongly contribute weight 1.
+        p = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkh->bkgqh", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new)
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    carry = (m0, l0, a0)
+
+    if n_chunks > 0:
+        ks = k[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, K, hd)
+        vs = v[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, K, hd)
+        pos = jnp.arange(n_chunks * chunk).reshape(n_chunks, chunk)
+
+        def scan_body(c, xs):
+            kc, vc, p = xs
+            return block(c, kc, vc, p), None
+
+        carry, _ = jax.lax.scan(
+            scan_body, carry,
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), pos))
+    if rem:
+        carry = block(carry, k[:, n_chunks * chunk:],
+                      v[:, n_chunks * chunk:],
+                      jnp.arange(n_chunks * chunk, Skv))
+
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, K, G, Sq, hd)
+    out = jnp.moveaxis(out, 3, 1)                     # (B, Sq, K, G, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_apply(p: Dict[str, jax.Array], x: jax.Array, *,
+               n_heads: int, n_kv: int, hd: int, rope_theta: float,
+               causal: bool = True, window: int = 0,
+               positions: Optional[jax.Array] = None,
+               kv_x: Optional[jax.Array] = None,
+               chunk: int = 1024) -> jax.Array:
+    """Full attention sub-layer (projections + RoPE + flash + output).
+
+    ``kv_x``: source for K/V (cross-attention); defaults to ``x``.
+    """
+    B, S, D = x.shape
+    src = x if kv_x is None else kv_x
+    Skv = src.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (src @ p["wk"]).reshape(B, Skv, n_kv, hd)
+    v = (src @ p["wv"]).reshape(B, Skv, n_kv, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv_x is None:  # self-attention: RoPE on both
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, jnp.arange(Skv)[None, :], rope_theta)
+    out = gqa_attention(q, k, v, causal=causal and kv_x is None,
+                        window=window, chunk=chunk)
+    return out.reshape(B, S, n_heads * hd) @ p["wo"]
+
+
+def _quant_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 quantization for KV-cache entries.
+    Returns (int8 values, f32 scales with a trailing singleton)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(p: Dict[str, jax.Array], x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, *, n_heads: int, n_kv: int,
+                     hd: int, rope_theta: float, window: int = 0,
+                     kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None
+                     ):
+    """One-token decode: append to cache, attend over valid prefix.
+
+    x: (B, 1, D); caches: (B, S_max, K, hd); cur_len: scalar int32 count of
+    valid cache entries *before* this token.
+    ``kv_scales``: (k_scale, v_scale) (B, S_max, K, 1) — present iff the
+    cache is int8-quantized (halves decode HBM traffic; on TPU the paged
+    kernel dequantizes in VMEM, here the jnp path dequantizes inline).
+    Returns (out, k_cache, v_cache[, new_scales]).
+    """
+    B, _, D = x.shape
+    S_max = k_cache.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, n_kv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, n_kv, hd)
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    slot = cur_len % S_max if window else cur_len  # ring buffer for SWA
+    upd = jax.lax.dynamic_update_slice_in_dim
+    if kv_scales is not None:
+        k8, ks = _quant_kv(k)
+        v8, vs = _quant_kv(v)
+        k_cache = upd(k_cache, k8, slot, axis=1)
+        v_cache = upd(v_cache, v8, slot, axis=1)
+        ksc = upd(kv_scales[0], ks, slot, axis=1)
+        vsc = upd(kv_scales[1], vs, slot, axis=1)
+        k_eff = k_cache.astype(jnp.float32) * ksc
+        v_eff = v_cache.astype(jnp.float32) * vsc
+    else:
+        k_cache = upd(k_cache, k, slot, axis=1)
+        v_cache = upd(v_cache, v, slot, axis=1)
+        k_eff, v_eff = k_cache, v_cache
+    out = gqa_attention(q, k_eff.astype(q.dtype), v_eff.astype(q.dtype),
+                        causal=False,
+                        kv_len=jnp.minimum(cur_len + 1, S_max),
+                        chunk=min(2048, S_max))
+    out = out.reshape(B, 1, n_heads * hd) @ p["wo"]
+    if kv_scales is not None:
+        return out, k_cache, v_cache, (ksc, vsc)
+    return out, k_cache, v_cache

@@ -1,0 +1,89 @@
+"""Shared neural building blocks (pure JAX, explicit param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_init(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(
+        jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array, gamma: jax.Array) -> jax.Array:
+    return rmsnorm(x, gamma) if kind == "rmsnorm" else layernorm(x, gamma)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype,
+             prefix_shape: Tuple[int, ...] = ()) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (*prefix_shape, d_model, d_ff), dtype),
+         "w_down": dense_init(ks[1], (*prefix_shape, d_ff, d_model), dtype)}
+    if activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (*prefix_shape, d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array,
+              activation: str) -> jax.Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy, numerically stable in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,307 @@
+"""Unified model assembly for every assigned architecture family.
+
+One param pytree + three entry points:
+
+* ``forward_train(params, cfg, batch)`` -> per-token loss (train_4k)
+* ``prefill(params, cfg, tokens, ...)`` -> (logits, cache)  (prefill_32k)
+* ``decode_step(params, cfg, cache, token)`` -> (logits, cache)
+  (decode_32k / long_500k)
+
+Layers are **stacked** (leading L dim) and executed under ``jax.lax.scan``
+so the HLO is O(1) in depth — compile times stay flat from stablelm-3b to
+internvl2-76b, and the dry-run's while-loop body is where the roofline
+parser finds per-layer collectives.
+
+Families: dense & vlm (decoder + optional stub patch prefix), moe
+(einsum/sort dispatch), audio (enc-dec with cross-attention), hybrid
+(Mamba2 stack with a shared-weight attention block every k layers), ssm
+(xLSTM: mLSTM stack + individually-placed sLSTM blocks).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AUDIO, DENSE, HYBRID, MOE, SSM, VLM
+from .attention import attn_apply, attn_init, decode_attention
+from .layers import (apply_norm, cross_entropy_loss, dense_init, mlp_apply,
+                     mlp_init)
+from .moe import moe_apply, moe_init
+from .ssm import (mamba2_init, mamba2_apply, mlstm_init, mlstm_apply,
+                  slstm_init, slstm_apply)
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    H: int
+    K: int
+    hd: int
+
+
+def model_dims(cfg: ArchConfig, tp: int = 1, pad_kv: bool = False
+               ) -> ModelDims:
+    H, K = cfg.padded_heads(tp, pad_kv)
+    return ModelDims(H, K, cfg.hd)
+
+
+# ---------------------------------------------------------------- init
+def _dense_layer_init(key, cfg: ArchConfig, dims: ModelDims, dtype,
+                      cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(ks[0], cfg.d_model, dims.H, dims.K, dims.hd, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cross:
+        p["lnx"] = jnp.ones((cfg.d_model,), dtype)
+        p["xattn"] = attn_init(ks[1], cfg.d_model, dims.H, dims.K, dims.hd,
+                               dtype)
+    if cfg.family == MOE:
+        p["moe"] = moe_init(ks[2], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.activation, dtype,
+                            dense_ff=cfg.dense_ff if cfg.moe_dense_residual
+                            else 0)
+    else:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.activation,
+                            dtype)
+    return p
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab padded to a multiple of 256 so embedding/lm_head shard on any
+    reasonable TP degree (only seamless's 256206 actually changes).
+    Labels stay < vocab_size; padded logits train their way to -inf."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32,
+                tp: int = 1, pad_kv: bool = False) -> Dict[str, Any]:
+    dims = model_dims(cfg, tp, pad_kv)
+    keys = jax.random.split(key, 8)
+    D, V, L = cfg.d_model, padded_vocab(cfg), cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (V, D), dtype, scale=1.0),
+        "final_norm": jnp.ones((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (D, V), dtype)
+
+    def stack(init_fn, n, key):
+        return jax.vmap(init_fn)(jax.random.split(key, n))
+
+    if cfg.family in (DENSE, VLM, MOE):
+        params["layers"] = stack(
+            lambda k: _dense_layer_init(k, cfg, dims, dtype), L, keys[2])
+    elif cfg.family == AUDIO:
+        params["enc_layers"] = stack(
+            lambda k: _dense_layer_init(k, cfg, dims, dtype),
+            cfg.encoder_layers, keys[2])
+        params["layers"] = stack(
+            lambda k: _dense_layer_init(k, cfg, dims, dtype, cross=True),
+            L, keys[3])
+    elif cfg.family == HYBRID:
+        params["layers"] = stack(
+            lambda k: {"ln": jnp.ones((D,), dtype),
+                       "mamba": mamba2_init(k, D, expand=cfg.ssm_expand,
+                                            d_state=cfg.ssm_state,
+                                            conv_k=cfg.ssm_conv,
+                                            dtype=dtype)},
+            L, keys[2])
+        params["shared_attn"] = _dense_layer_init(keys[3], cfg, dims, dtype)
+    elif cfg.family == SSM:
+        m_idx = [i for i in range(L) if i not in cfg.slstm_layers]
+        params["mlstm_layers"] = stack(
+            lambda k: {"ln": jnp.ones((D,), dtype),
+                       "mlstm": mlstm_init(k, D, cfg.n_heads, dtype=dtype),
+                       "ln2": jnp.ones((D,), dtype),
+                       "mlp": mlp_init(jax.random.fold_in(k, 1), D,
+                                       max(cfg.d_ff, 2 * D), cfg.activation,
+                                       dtype)},
+            len(m_idx), keys[2])
+        params["slstm_layers"] = [
+            {"ln": jnp.ones((D,), dtype),
+             "slstm": slstm_init(jax.random.fold_in(keys[3], i), D,
+                                 dtype=dtype),
+             "ln2": jnp.ones((D,), dtype),
+             "mlp": mlp_init(jax.random.fold_in(keys[4], i), D,
+                             max(cfg.d_ff, 2 * D), cfg.activation, dtype)}
+            for i in cfg.slstm_layers]
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_count_tree(params) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------- forward
+def _dense_block(lp, x, cfg: ArchConfig, dims: ModelDims, *,
+                 enc_out=None, causal=True, dispatch="einsum", chunk=1024):
+    h = x + attn_apply(
+        lp["attn"], apply_norm(cfg.norm, x, lp["ln1"]), n_heads=dims.H,
+        n_kv=dims.K, hd=dims.hd, rope_theta=cfg.rope_theta, causal=causal,
+        window=cfg.sliding_window, chunk=chunk)
+    if enc_out is not None:
+        h = h + attn_apply(
+            lp["xattn"], apply_norm(cfg.norm, h, lp["lnx"]), n_heads=dims.H,
+            n_kv=dims.K, hd=dims.hd, rope_theta=cfg.rope_theta,
+            causal=False, kv_x=enc_out, chunk=chunk)
+    hn = apply_norm(cfg.norm, h, lp["ln2"])
+    if cfg.family == MOE:
+        y, aux = moe_apply(lp["moe"], hn, top_k=cfg.top_k,
+                           activation=cfg.activation,
+                           capacity_factor=cfg.capacity_factor,
+                           dispatch=dispatch)
+        return h + y, aux
+    return h + mlp_apply(lp["mlp"], hn, cfg.activation), 0.0
+
+
+def _run_decoder_stack(params, cfg: ArchConfig, dims: ModelDims, x, *,
+                       enc_out=None, dispatch="einsum", remat=False,
+                       chunk=1024):
+    """Scan the (stacked) layer pytree over x. Returns (x, aux_loss)."""
+    if cfg.family in (DENSE, VLM, MOE, AUDIO):
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _dense_block(lp, h, cfg, dims, enc_out=enc_out,
+                                dispatch=dispatch, chunk=chunk)
+            return (h, aux + a), None
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(fn, (x, 0.0), params["layers"])
+        return x, aux
+
+    if cfg.family == HYBRID:
+        k = cfg.shared_attn_every
+        L = cfg.n_layers
+        n_groups, rem = divmod(L, k)
+
+        def mamba_body(h, lp):
+            y, _ = mamba2_apply(lp["mamba"],
+                                apply_norm(cfg.norm, h, lp["ln"]),
+                                expand=cfg.ssm_expand, d_state=cfg.ssm_state)
+            return h + y, None
+
+        mb = jax.checkpoint(mamba_body) if remat else mamba_body
+        stacked = params["layers"]
+        main = jax.tree.map(
+            lambda a: a[:n_groups * k].reshape(n_groups, k, *a.shape[1:]),
+            stacked)
+
+        def group_body(h, glp):
+            h, _ = jax.lax.scan(mb, h, glp)
+            h, _ = _dense_block(params["shared_attn"], h, cfg, dims,
+                                chunk=chunk)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, main)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_groups * k:], stacked)
+            x, _ = jax.lax.scan(mb, x, tail)
+        return x, 0.0
+
+    if cfg.family == SSM:
+        def mlstm_body(h, lp):
+            y, _ = mlstm_apply(lp["mlstm"], apply_norm(cfg.norm, h, lp["ln"]),
+                               cfg.n_heads)
+            h = h + y
+            h = h + mlp_apply(lp["mlp"], apply_norm(cfg.norm, h, lp["ln2"]),
+                              cfg.activation)
+            return h, None
+
+        # interleave: sLSTM blocks at their configured indices, mLSTM stack
+        # split into contiguous runs between them (each run a scan).
+        runs = _slstm_runs(cfg)
+        m_off = 0
+        for run_len, s_idx in runs:
+            if run_len:
+                seg = jax.tree.map(lambda a: a[m_off:m_off + run_len],
+                                   params["mlstm_layers"])
+                x, _ = jax.lax.scan(mlstm_body, x, seg)
+                m_off += run_len
+            if s_idx is not None:
+                lp = params["slstm_layers"][s_idx]
+                y, _ = slstm_apply(lp["slstm"],
+                                   apply_norm(cfg.norm, x, lp["ln"]))
+                x = x + y
+                x = x + mlp_apply(lp["mlp"],
+                                  apply_norm(cfg.norm, x, lp["ln2"]),
+                                  cfg.activation)
+        return x, 0.0
+
+    raise ValueError(cfg.family)  # pragma: no cover
+
+
+def _slstm_runs(cfg: ArchConfig):
+    """[(mlstm_run_length, slstm_list_index_or_None), ...] covering L."""
+    runs = []
+    run = 0
+    s_seen = 0
+    for i in range(cfg.n_layers):
+        if i in cfg.slstm_layers:
+            runs.append((run, s_seen))
+            s_seen += 1
+            run = 0
+        else:
+            run += 1
+    runs.append((run, None))
+    return runs
+
+
+def _embed(params, cfg: ArchConfig, tokens: jax.Array,
+           prefix_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return x @ head
+
+
+def forward_train(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+                  dispatch: str = "einsum", remat: bool = False,
+                  chunk: int = 1024) -> jax.Array:
+    """batch: tokens (B,S), labels (B,S); optional enc_frames (B,Se,D),
+    prefix_embeds (B,P,D). Returns scalar loss."""
+    dims = dims_from_params(params, cfg)
+    enc_out = None
+    if cfg.family == AUDIO:
+        enc = batch["enc_frames"]
+
+        def enc_body(h, lp):
+            h, _ = _dense_block(lp, h, cfg, dims, causal=False, chunk=chunk)
+            return h, None
+        eb = jax.checkpoint(enc_body) if remat else enc_body
+        enc_out, _ = jax.lax.scan(eb, enc, params["enc_layers"])
+    x = _embed(params, cfg, batch["tokens"], batch.get("prefix_embeds"))
+    x, aux = _run_decoder_stack(params, cfg, dims, x, enc_out=enc_out,
+                                dispatch=dispatch, remat=remat, chunk=chunk)
+    logits = _logits(params, cfg, x)
+    labels = batch["labels"]
+    if batch.get("prefix_embeds") is not None:
+        P = batch["prefix_embeds"].shape[1]
+        logits = logits[:, P:]
+    loss = cross_entropy_loss(logits, labels)
+    return loss + 0.01 * aux
+
+
+def dims_from_params(params, cfg: ArchConfig) -> ModelDims:
+    """Head counts as actually initialized (incl. TP padding), derived
+    from the param shapes — works on arrays and ShapeDtypeStructs alike."""
+    if cfg.family == SSM:
+        return ModelDims(cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    attn = (params["shared_attn"]["attn"] if cfg.family == HYBRID
+            else params["layers"]["attn"])
+    hd = cfg.hd
+    return ModelDims(attn["wq"].shape[-1] // hd,
+                     attn["wk"].shape[-1] // hd, hd)

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts layer: top-k routing with two dispatch strategies.
+
+* ``einsum`` — GShard/Switch-style dense one-hot dispatch with per-group
+  capacity. Simple, fully shardable, but pays O(T·E·C·D) dispatch FLOPs —
+  this is the *paper-faithful-era baseline* recorded in §Roofline.
+* ``sort`` — tokens sorted by expert id, experts run as equal-segment
+  batched matmuls, results scattered back. O(T·D·log T) data movement and
+  *zero* dispatch matmul FLOPs — the beyond-baseline optimization
+  (EXPERIMENTS.md §Perf hillclimb for the arctic cell).
+
+EdgeKV tie-in (DESIGN.md §3): expert *placement* across the model axis is
+computed by the consistent-hash ring with weighted virtual nodes
+(``repro.edgecache.placement_of_experts``); the layer itself consumes a
+permutation so placement changes never recompile.
+
+Capacity grouping: tokens are grouped per sequence (train/prefill) or per
+batch (decode); capacity C = ceil(T_g / E * cf * k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init, mlp_apply
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, activation: str,
+             dtype, *, dense_ff: int = 0) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), dtype),
+        "experts": mlp_init(ks[1], d_model, d_ff, activation, dtype,
+                            prefix_shape=(n_experts,)),
+    }
+    if dense_ff:
+        p["dense"] = mlp_init(ks[2], d_model, dense_ff, activation, dtype)
+    return p
+
+
+def _top_k_gating(x: jax.Array, router: jax.Array, top_k: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gate_weights (G,T,k), expert_ids (G,T,k), aux_loss)."""
+    logits = (x @ router).astype(jnp.float32)               # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    E = router.shape[-1]
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(ids[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return gates, ids, aux
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int,
+              cf: float) -> int:
+    return max(1, math.ceil(tokens_per_group * top_k * cf / n_experts))
+
+
+def moe_apply_einsum(p: Dict[str, jax.Array], x: jax.Array, *, top_k: int,
+                     activation: str, capacity_factor: float = 1.25
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Dense one-hot dispatch. x: (G, T, D) grouped tokens."""
+    G, T, D = x.shape
+    E = p["router"].shape[-1]
+    C = _capacity(T, E, top_k, capacity_factor)
+    gates, ids, aux = _top_k_gating(x, p["router"], top_k)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)        # (G,T,k,E)
+    flat = onehot.reshape(G, T * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                      # (G,T*k,E)
+    pos = (pos * flat).sum(-1).reshape(G, T, top_k)         # (G,T,k)
+    keep = pos < C
+    disp = (jax.nn.one_hot(ids, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, C, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))        # (G,T,k,E,C)
+    dispatch = disp.sum(2)                                  # (G,T,E,C)
+    combine = (disp * gates[..., None, None].astype(x.dtype)).sum(2)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, x)          # (G,E,C,D)
+    h = _expert_ffn(p["experts"], xe, activation)
+    y = jnp.einsum("gecd,gtec->gtd", h, combine)
+    if "dense" in p:
+        y = y + mlp_apply(p["dense"], x, activation)
+    return y, aux
+
+
+def _expert_ffn(pe: Dict[str, jax.Array], xe: jax.Array,
+                activation: str) -> jax.Array:
+    """Batched per-expert FFN. xe: (G,E,C,D); weights: (E,D,F)/(E,F,D)."""
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, pe["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, pe["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, pe["w_up"]))
+    return jnp.einsum("gecf,efd->gecd", h, pe["w_down"])
+
+
+def moe_apply_sort(p: Dict[str, jax.Array], x: jax.Array, *, top_k: int,
+                   activation: str, capacity_factor: float = 1.25
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based dispatch: no one-hot matmuls.
+
+    Tokens (flattened over groups) are sorted by assigned expert; each
+    expert reads a fixed-capacity slice of the sorted buffer (capacity
+    overflow drops, like the einsum path); outputs scatter back.
+    """
+    G, T, D = x.shape
+    E = p["router"].shape[-1]
+    C = _capacity(T, E, top_k, capacity_factor)
+    gates, ids, aux = _top_k_gating(x, p["router"], top_k)
+
+    def one_group(xg, idg, gg):
+        # xg: (T,D); idg/gg: (T,k)
+        tk = T * top_k
+        flat_ids = idg.reshape(tk)                          # expert of slot
+        flat_gates = gg.reshape(tk)
+        tok_of_slot = jnp.repeat(jnp.arange(T), top_k)
+        order = jnp.argsort(flat_ids, stable=True)
+        sorted_ids = flat_ids[order]
+        sorted_tok = tok_of_slot[order]
+        sorted_gates = flat_gates[order]
+        # rank within expert = position - first position of that expert
+        idx = jnp.arange(tk)
+        first = jnp.searchsorted(sorted_ids, jnp.arange(E), side="left")
+        rank = idx - first[sorted_ids]
+        keep = rank < C
+        slot = jnp.where(keep, sorted_ids * C + rank, E * C)  # E*C = trash
+        buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(
+            xg[sorted_tok] * keep[:, None].astype(x.dtype))
+        xe = buf[:E * C].reshape(E, C, D)
+        h = _expert_ffn(p["experts"], xe[None], activation)[0]  # (E,C,D)
+        yg = jnp.zeros((T, D), jnp.float32).at[sorted_tok].add(
+            h.reshape(E * C, D)[jnp.minimum(slot, E * C - 1)]
+            * (sorted_gates * keep)[:, None])
+        return yg.astype(x.dtype)
+
+    y = jax.vmap(one_group)(x, ids, gates)
+    if "dense" in p:
+        y = y + mlp_apply(p["dense"], x, activation)
+    return y, aux
+
+
+def moe_apply(p, x, *, top_k: int, activation: str,
+              capacity_factor: float = 1.25, dispatch: str = "einsum"):
+    fn = moe_apply_einsum if dispatch == "einsum" else moe_apply_sort
+    return fn(p, x, top_k=top_k, activation=activation,
+              capacity_factor=capacity_factor)

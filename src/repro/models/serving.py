@@ -1,0 +1,400 @@
+"""Serving entry points: cache construction, prefill, single-token decode.
+
+``decode_step`` is what the assignment's ``decode_*`` / ``long_*`` shapes
+lower: one new token against a KV cache of seq_len. Caches are stacked
+per layer (leading L dim) and updated inside the same ``lax.scan`` that
+runs the layers, so decode HLO is depth-independent too.
+
+Cache shapes by family (B = batch, S = max cache length):
+  dense/moe/vlm: k,v (L, B, S, K, hd); SWA archs use S = window (ring
+  buffer — constant memory, which is what qualifies mixtral for long_500k).
+  audio:        decoder self k,v + precomputed cross k,v over enc_out.
+  hybrid:       mamba conv (L,B,ck-1,C) + ssm state (L,B,H,N,P) + shared
+                attn k,v per application point (constant count).
+  ssm:          mLSTM matrix states + sLSTM (h,c,n) — all constant-size.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AUDIO, DENSE, HYBRID, MOE, SSM, VLM
+from .attention import attn_apply, decode_attention, gqa_attention
+from .layers import apply_norm, mlp_apply, apply_rope
+from .moe import moe_apply
+from .ssm import mamba2_apply, mlstm_apply, slstm_apply
+from .model import (ModelDims, dims_from_params, _embed, _logits,
+                    _slstm_runs)
+
+
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def init_cache(params, cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.float32, enc_len: int = 0,
+               kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+    dims = dims_from_params(params, cfg)
+    S = cache_len_for(cfg, max_len)
+    L, D = cfg.n_layers, cfg.d_model
+    c: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.family in (DENSE, MOE, VLM, AUDIO):
+        kvd = jnp.int8 if kv_dtype == "int8" else dtype
+        c["k"] = jnp.zeros((L, batch, S, dims.K, dims.hd), kvd)
+        c["v"] = jnp.zeros((L, batch, S, dims.K, dims.hd), kvd)
+        if kv_dtype == "int8":
+            c["ks"] = jnp.ones((L, batch, S, dims.K, 1), jnp.float32)
+            c["vs"] = jnp.ones((L, batch, S, dims.K, 1), jnp.float32)
+    if cfg.family == AUDIO:
+        c["xk"] = jnp.zeros((L, batch, enc_len, dims.K, dims.hd), dtype)
+        c["xv"] = jnp.zeros((L, batch, enc_len, dims.K, dims.hd), dtype)
+    if cfg.family == HYBRID:
+        d_in = cfg.ssm_expand * D
+        nh = d_in // 64
+        conv_c = d_in + 2 * cfg.ssm_state
+        n_app = cfg.n_layers // cfg.shared_attn_every
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_c), dtype)
+        c["ssm"] = jnp.zeros((L, batch, nh, cfg.ssm_state, 64), jnp.float32)
+        c["ak"] = jnp.zeros((n_app, batch, S, dims.K, dims.hd), dtype)
+        c["av"] = jnp.zeros((n_app, batch, S, dims.K, dims.hd), dtype)
+    if cfg.family == SSM:
+        nh = cfg.n_heads
+        hd2 = 2 * D // nh
+        Lm = cfg.n_layers - len(cfg.slstm_layers)
+        Ls = len(cfg.slstm_layers)
+        c["m_num"] = jnp.zeros((Lm, batch * nh, 1, hd2, hd2), jnp.float32)
+        c["m_den"] = jnp.zeros((Lm, batch * nh, 1, hd2, 1), jnp.float32)
+        c["s_h"] = jnp.zeros((Ls, batch, D), jnp.float32)
+        c["s_c"] = jnp.zeros((Ls, batch, D), jnp.float32)
+        c["s_n"] = jnp.ones((Ls, batch, D), jnp.float32)
+    return c
+
+
+# ------------------------------------------------------------------ decode
+def _ffn_or_moe(lp, hn, cfg: ArchConfig, dispatch: str):
+    if cfg.family == MOE:
+        B = hn.shape[0]
+        grouped = hn.reshape(1, B, cfg.d_model)  # decode: one group = batch
+        y, _ = moe_apply(lp["moe"], grouped, top_k=cfg.top_k,
+                         activation=cfg.activation,
+                         capacity_factor=max(cfg.capacity_factor, 2.0),
+                         dispatch=dispatch)
+        return y.reshape(B, 1, cfg.d_model)
+    return mlp_apply(lp["mlp"], hn, cfg.activation)
+
+
+def decode_step(params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, *, dispatch: str = "einsum"
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B, 1) int32. Returns (logits (B, V), new cache)."""
+    dims = dims_from_params(params, cfg)
+    x = _embed(params, cfg, tokens)
+    cur = cache["len"]
+    new_cache = dict(cache)
+
+    if cfg.family in (DENSE, MOE, VLM, AUDIO):
+        has_cross = cfg.family == AUDIO
+        quant = "ks" in cache
+
+        def body(h, inp):
+            lp, kc, vc, xk, xv, ksc, vsc = inp
+            hn = apply_norm(cfg.norm, h, lp["ln1"])
+            res = decode_attention(
+                lp["attn"], hn, kc, vc, cur, n_heads=dims.H, n_kv=dims.K,
+                hd=dims.hd, rope_theta=cfg.rope_theta,
+                window=cfg.sliding_window,
+                kv_scales=(ksc, vsc) if quant else None)
+            if quant:
+                out, kc, vc, (ksc, vsc) = res
+            else:
+                out, kc, vc = res
+            h = h + out
+            if has_cross:
+                hx = apply_norm(cfg.norm, h, lp["lnx"])
+                q = (hx @ lp["xattn"]["wq"]).reshape(
+                    h.shape[0], 1, dims.H, dims.hd)
+                o = gqa_attention(q, xk, xv, causal=False)
+                h = h + o.reshape(h.shape[0], 1, dims.H * dims.hd) \
+                    @ lp["xattn"]["wo"]
+            h = h + _ffn_or_moe(lp, apply_norm(cfg.norm, h, lp["ln2"]),
+                                cfg, dispatch)
+            return h, (kc, vc, ksc, vsc)
+
+        L = cfg.n_layers
+        xk = cache.get("xk")
+        xv = cache.get("xv")
+        if not has_cross:
+            xk = jnp.zeros((L, 1, 1, dims.K, dims.hd), x.dtype)
+            xv = xk
+        ksc = cache.get("ks")
+        vsc = cache.get("vs")
+        if not quant:
+            ksc = jnp.zeros((L, 1, 1, dims.K, 1), jnp.float32)
+            vsc = ksc
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"], xk, xv,
+                      ksc, vsc))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+        if quant:
+            new_cache["ks"], new_cache["vs"] = ks_new, vs_new
+
+    elif cfg.family == HYBRID:
+        k_every = cfg.shared_attn_every
+        L = cfg.n_layers
+        n_groups, rem = divmod(L, k_every)
+
+        def mamba_body(h, inp):
+            lp, conv, ssm = inp
+            y, st = mamba2_apply(lp["mamba"],
+                                 apply_norm(cfg.norm, h, lp["ln"]),
+                                 expand=cfg.ssm_expand,
+                                 d_state=cfg.ssm_state,
+                                 state={"conv": conv, "ssm": ssm})
+            return h + y, (st["conv"], st["ssm"])
+
+        stacked = params["layers"]
+        take = lambda a, lo, hi: jax.tree.map(lambda t: t[lo:hi], a)
+        sa = params["shared_attn"]
+        ak_new, av_new = [], []
+        off = 0
+        for g in range(n_groups):
+            seg = take(stacked, off, off + k_every)
+            x, (cnew, snew) = jax.lax.scan(
+                mamba_body, x,
+                (seg, cache["conv"][off:off + k_every],
+                 cache["ssm"][off:off + k_every]))
+            new_cache["conv"] = new_cache["conv"].at[off:off + k_every].set(
+                cnew)
+            new_cache["ssm"] = new_cache["ssm"].at[off:off + k_every].set(
+                snew)
+            hn = apply_norm(cfg.norm, x, sa["ln1"])
+            out, kk, vv = decode_attention(
+                sa["attn"], hn, cache["ak"][g], cache["av"][g], cur,
+                n_heads=dims.H, n_kv=dims.K, hd=dims.hd,
+                rope_theta=cfg.rope_theta)
+            x = x + out
+            x = x + mlp_apply(sa["mlp"], apply_norm(cfg.norm, x, sa["ln2"]),
+                              cfg.activation)
+            ak_new.append(kk)
+            av_new.append(vv)
+            off += k_every
+        if rem:
+            seg = take(stacked, off, L)
+            x, (cnew, snew) = jax.lax.scan(
+                mamba_body, x, (seg, cache["conv"][off:], cache["ssm"][off:]))
+            new_cache["conv"] = new_cache["conv"].at[off:].set(cnew)
+            new_cache["ssm"] = new_cache["ssm"].at[off:].set(snew)
+        if ak_new:
+            new_cache["ak"] = jnp.stack(ak_new)
+            new_cache["av"] = jnp.stack(av_new)
+
+    elif cfg.family == SSM:
+        mi = si = 0
+        m_num, m_den = [], []
+        for run_len, s_idx in _slstm_runs(cfg):
+            for _ in range(run_len):
+                lp = jax.tree.map(lambda a: a[mi], params["mlstm_layers"])
+                y, st = mlstm_apply(
+                    lp["mlstm"], apply_norm(cfg.norm, x, lp["ln"]),
+                    cfg.n_heads,
+                    state={"num": cache["m_num"][mi],
+                           "den": cache["m_den"][mi]})
+                x = x + y
+                x = x + mlp_apply(lp["mlp"],
+                                  apply_norm(cfg.norm, x, lp["ln2"]),
+                                  cfg.activation)
+                m_num.append(st["num"])
+                m_den.append(st["den"])
+                mi += 1
+            if s_idx is not None:
+                lp = params["slstm_layers"][s_idx]
+                y, st = slstm_apply(
+                    lp["slstm"], apply_norm(cfg.norm, x, lp["ln"]),
+                    state={"h": cache["s_h"][s_idx],
+                           "c": cache["s_c"][s_idx],
+                           "n": cache["s_n"][s_idx]})
+                x = x + y
+                x = x + mlp_apply(lp["mlp"],
+                                  apply_norm(cfg.norm, x, lp["ln2"]),
+                                  cfg.activation)
+                new_cache["s_h"] = new_cache["s_h"].at[s_idx].set(st["h"])
+                new_cache["s_c"] = new_cache["s_c"].at[s_idx].set(st["c"])
+                new_cache["s_n"] = new_cache["s_n"].at[s_idx].set(st["n"])
+        new_cache["m_num"] = jnp.stack(m_num)
+        new_cache["m_den"] = jnp.stack(m_den)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    new_cache["len"] = cur + 1
+    logits = _logits(params, cfg, x)[:, -1]
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------- prefill
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, *,
+            max_len: Optional[int] = None, dispatch: str = "einsum",
+            enc_frames: Optional[jax.Array] = None,
+            prefix_embeds: Optional[jax.Array] = None, chunk: int = 1024
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence forward that also builds the decode cache.
+    Returns (logits (B,S,V), cache)."""
+    dims = dims_from_params(params, cfg)
+    B, S_tok = tokens.shape
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    S_cache = cache_len_for(cfg, max_len or S)
+    cache = init_cache(params, cfg, B, max_len or S, x.dtype,
+                       enc_len=enc_frames.shape[1] if enc_frames is not None
+                       else 0)
+
+    enc_out = None
+    if cfg.family == AUDIO:
+        def enc_body(h, lp):
+            hn = apply_norm(cfg.norm, h, lp["ln1"])
+            h = h + attn_apply(lp["attn"], hn, n_heads=dims.H, n_kv=dims.K,
+                               hd=dims.hd, rope_theta=cfg.rope_theta,
+                               causal=False, chunk=chunk)
+            h = h + mlp_apply(lp["mlp"], apply_norm(cfg.norm, h, lp["ln2"]),
+                              cfg.activation)
+            return h, None
+        enc_out, _ = jax.lax.scan(enc_body, enc_frames, params["enc_layers"])
+
+    def proj_kv(lp, src, rope: bool):
+        Bs, Ss, _ = src.shape
+        k = (src @ lp["wk"]).reshape(Bs, Ss, dims.K, dims.hd)
+        v = (src @ lp["wv"]).reshape(Bs, Ss, dims.K, dims.hd)
+        if rope:
+            k = apply_rope(k, jnp.arange(Ss)[None], cfg.rope_theta)
+        return k, v
+
+    def store(kv, S_cache):
+        """Fit computed prefix K/V into the (ring-buffered) cache window."""
+        k, v = kv
+        if S <= S_cache:
+            pad = S_cache - S
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return k, v
+        # SWA: keep last S_cache entries at slots pos % S_cache
+        k = jnp.roll(k[:, -S_cache:], S % S_cache, axis=1)
+        v = jnp.roll(v[:, -S_cache:], S % S_cache, axis=1)
+        return k, v
+
+    if cfg.family in (DENSE, MOE, VLM, AUDIO):
+        def body(carry, lp):
+            h = carry
+            hn = apply_norm(cfg.norm, h, lp["ln1"])
+            h = h + attn_apply(lp["attn"], hn, n_heads=dims.H, n_kv=dims.K,
+                               hd=dims.hd, rope_theta=cfg.rope_theta,
+                               causal=True, window=cfg.sliding_window,
+                               chunk=chunk)
+            kv = store(proj_kv(lp["attn"], hn, True), S_cache)
+            xkv = (jnp.zeros((B, 0, dims.K, dims.hd), h.dtype),) * 2
+            if cfg.family == AUDIO:
+                hx = apply_norm(cfg.norm, h, lp["lnx"])
+                h = h + attn_apply(lp["xattn"], hx, n_heads=dims.H,
+                                   n_kv=dims.K, hd=dims.hd,
+                                   rope_theta=cfg.rope_theta, causal=False,
+                                   kv_x=enc_out, chunk=chunk)
+                xkv = proj_kv(lp["xattn"], enc_out, False)
+            hn2 = apply_norm(cfg.norm, h, lp["ln2"])
+            if cfg.family == MOE:
+                y, _ = moe_apply(lp["moe"], hn2, top_k=cfg.top_k,
+                                 activation=cfg.activation,
+                                 capacity_factor=cfg.capacity_factor,
+                                 dispatch=dispatch)
+                h = h + y
+            else:
+                h = h + mlp_apply(lp["mlp"], hn2, cfg.activation)
+            return h, (kv[0], kv[1], xkv[0], xkv[1])
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["layers"])
+        cache["k"], cache["v"] = ks, vs
+        if cfg.family == AUDIO:
+            cache["xk"], cache["xv"] = xks, xvs
+
+    elif cfg.family == HYBRID:
+        k_every = cfg.shared_attn_every
+        L = cfg.n_layers
+        n_groups, rem = divmod(L, k_every)
+        d_in = cfg.ssm_expand * cfg.d_model
+        conv_c = d_in + 2 * cfg.ssm_state
+
+        def mamba_body(h, inp):
+            lp, conv0, ssm0 = inp
+            y, st = mamba2_apply(lp["mamba"],
+                                 apply_norm(cfg.norm, h, lp["ln"]),
+                                 expand=cfg.ssm_expand,
+                                 d_state=cfg.ssm_state,
+                                 state={"conv": conv0, "ssm": ssm0})
+            return h + y, (st["conv"], st["ssm"])
+
+        sa = params["shared_attn"]
+        stacked = params["layers"]
+        take = lambda a, lo, hi: jax.tree.map(lambda t: t[lo:hi], a)
+        off = 0
+        aks, avs = [], []
+        for g in range(n_groups + (1 if rem else 0)):
+            hi = min(off + k_every, L)
+            seg = take(stacked, off, hi)
+            x, (cnew, snew) = jax.lax.scan(
+                mamba_body, x, (seg, cache["conv"][off:hi],
+                                cache["ssm"][off:hi]))
+            cache["conv"] = cache["conv"].at[off:hi].set(cnew)
+            cache["ssm"] = cache["ssm"].at[off:hi].set(snew)
+            if hi - off == k_every and g < n_groups:
+                hn = apply_norm(cfg.norm, x, sa["ln1"])
+                x = x + attn_apply(sa["attn"], hn, n_heads=dims.H,
+                                   n_kv=dims.K, hd=dims.hd,
+                                   rope_theta=cfg.rope_theta, causal=True,
+                                   chunk=chunk)
+                aks_, avs_ = store(proj_kv(sa["attn"], hn, True), S_cache)
+                aks.append(aks_)
+                avs.append(avs_)
+                x = x + mlp_apply(sa["mlp"],
+                                  apply_norm(cfg.norm, x, sa["ln2"]),
+                                  cfg.activation)
+            off = hi
+        if aks:
+            cache["ak"] = jnp.stack(aks)
+            cache["av"] = jnp.stack(avs)
+
+    elif cfg.family == SSM:
+        nh = cfg.n_heads
+        mi = 0
+        for run_len, s_idx in _slstm_runs(cfg):
+            for _ in range(run_len):
+                lp = jax.tree.map(lambda a: a[mi], params["mlstm_layers"])
+                y, st = mlstm_apply(
+                    lp["mlstm"], apply_norm(cfg.norm, x, lp["ln"]),
+                    nh, state={"num": cache["m_num"][mi],
+                               "den": cache["m_den"][mi]})
+                x = x + y
+                x = x + mlp_apply(lp["mlp"],
+                                  apply_norm(cfg.norm, x, lp["ln2"]),
+                                  cfg.activation)
+                cache["m_num"] = cache["m_num"].at[mi].set(st["num"])
+                cache["m_den"] = cache["m_den"].at[mi].set(st["den"])
+                mi += 1
+            if s_idx is not None:
+                lp = params["slstm_layers"][s_idx]
+                y, st = slstm_apply(
+                    lp["slstm"], apply_norm(cfg.norm, x, lp["ln"]),
+                    state={"h": cache["s_h"][s_idx],
+                           "c": cache["s_c"][s_idx],
+                           "n": cache["s_n"][s_idx]})
+                x = x + y
+                x = x + mlp_apply(lp["mlp"],
+                                  apply_norm(cfg.norm, x, lp["ln2"]),
+                                  cfg.activation)
+                cache["s_h"] = cache["s_h"].at[s_idx].set(st["h"])
+                cache["s_c"] = cache["s_c"].at[s_idx].set(st["c"])
+                cache["s_n"] = cache["s_n"].at[s_idx].set(st["n"])
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    logits = _logits(params, cfg, x)
+    return logits, cache

@@ -1,0 +1,296 @@
+"""Recurrent / state-space blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+All sequence mixing is *chunkwise parallel* (the Mamba2 SSD algorithm):
+within a chunk of Q tokens the recurrence is evaluated as a masked
+attention-like matmul; across chunks a tiny ``lax.scan`` passes the
+(heads, d_state, head_dim) state. This is the formulation the Pallas
+``kernels/ssm_scan`` tiles into VMEM on TPU; the pure-jnp version here is
+its oracle and the dry-run path.
+
+mLSTM reuses the same machinery (matrix memory == linear-attention state
+with per-head scalar gates); sLSTM is strictly sequential by construction
+(xLSTM paper) and runs as a ``lax.scan`` over time.
+
+Simplifications (documented in DESIGN.md): single SSM group (B/C shared
+across heads); mLSTM uses sigmoid input gating rather than the
+exponential-gate max-stabilizer (identical compute/memory shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init, mlp_apply, rmsnorm
+
+
+# ----------------------------------------------------------- SSD (Mamba2)
+def ssd_chunked(x: jax.Array, loga: jax.Array, dt: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunkwise selective-state-space scan.
+
+    x:    (B, S, H, P)   inputs per head
+    loga: (B, S, H)      log decay (<= 0)
+    dt:   (B, S, H)      input step scale
+    Bm:   (B, S, N)      input->state projection (shared across heads)
+    Cm:   (B, S, N)      state->output projection
+    h0:   (B, H, N, P)   initial state (decode/chunked prefill)
+    Returns (y: (B,S,H,P), h_final: (B,H,N,P)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    NC = S // Q
+
+    xw = x * dt[..., None]                                  # (B,S,H,P)
+    xw = xw.reshape(Bsz, NC, Q, H, P)
+    la = loga.reshape(Bsz, NC, Q, H)
+    Bc = Bm.reshape(Bsz, NC, Q, N)
+    Cc = Cm.reshape(Bsz, NC, Q, N)
+
+    cum = jnp.cumsum(la, axis=2)                            # (B,NC,Q,H)
+    # intra-chunk: masked decay matrix per head
+    dd = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(dd), 0.0)
+    CB = jnp.einsum("bnqd,bnsd->bnqs", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bnqs,bnqsh,bnshp->bnqhp",
+                         CB, decay.astype(jnp.float32),
+                         xw.astype(jnp.float32))
+
+    # chunk summary states: S_n = sum_s exp(cum_Q - cum_s) * B_s x~_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,NC,Q,H)
+    states = jnp.einsum("bnsd,bnsh,bnshp->bnhdp",
+                        Bc.astype(jnp.float32), tail, xw.astype(jnp.float32))
+
+    # inter-chunk state passing
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,NC,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def scan_body(h, inp):
+        st, cd = inp                                        # (B,H,N,P),(B,H)
+        h_new = h * cd[..., None, None] + st
+        return h_new, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_body, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bnqd,bnhdp->bnqhp", Cc.astype(jnp.float32),
+                         h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_ref(x, loga, dt, Bm, Cm, h0=None):
+    """Sequential reference (oracle for tests & the Pallas kernel)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        a = jnp.exp(loga[:, t]).astype(jnp.float32)         # (B,H)
+        upd = jnp.einsum("bd,bhp->bhdp", Bm[:, t].astype(jnp.float32),
+                         (x[:, t] * dt[:, t, :, None]).astype(jnp.float32))
+        h = h * a[..., None, None] + upd
+        ys.append(jnp.einsum("bd,bhdp->bhp", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+# ------------------------------------------------------------ Mamba2 block
+def mamba2_init(key, d_model: int, *, expand: int, d_state: int,
+                conv_k: int, head_p: int = 64, dtype=jnp.float32
+                ) -> Dict[str, jax.Array]:
+    d_in = expand * d_model
+    nh = d_in // head_p
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_in + 2 * d_state + nh),
+                              dtype),
+        "conv_w": dense_init(ks[1], (conv_k, d_in + 2 * d_state), dtype,
+                             scale=1.0 / math.sqrt(conv_k)),
+        "conv_b": jnp.zeros((d_in + 2 * d_state,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gamma": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B,S,C); w: (K,C). Returns (y, new_state)
+    where state is the last K-1 inputs (for decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return y, xp[:, -(K - 1):]
+
+
+def mamba2_apply(p: Dict[str, jax.Array], u: jax.Array, *, expand: int,
+                 d_state: int, head_p: int = 64, chunk: int = 128,
+                 state: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """u: (B, S, D). state (decode): {'conv': (B,K-1,C), 'ssm': (B,H,N,P)}."""
+    B, S, D = u.shape
+    d_in = expand * D
+    nh = d_in // head_p
+    z, xbc, dt = jnp.split(u @ p["in_proj"],
+                           [d_in, 2 * d_in + 2 * d_state], axis=-1)
+    conv_state = state["conv"] if state else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + d_state], axis=-1)
+    x = x.reshape(B, S, nh, head_p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    loga = -jnp.exp(p["A_log"]) * dt                        # (B,S,H)
+    h0 = state["ssm"] if state else None
+    if S == 1 and state is not None:
+        # decode: single recurrent step
+        a = jnp.exp(loga[:, 0]).astype(jnp.float32)
+        upd = jnp.einsum("bd,bhp->bhdp", Bm[:, 0].astype(jnp.float32),
+                         (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+        h = h0 * a[..., None, None] + upd
+        y = jnp.einsum("bd,bhdp->bhp", Cm[:, 0].astype(jnp.float32),
+                       h)[:, None]
+        h_final = h
+    else:
+        y, h_final = ssd_chunked(x, loga, dt, Bm, Cm, chunk=chunk, h0=h0)
+    y = y.astype(x.dtype) + x * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    y = rmsnorm(y, p["gamma"])
+    out = (y @ p["out_proj"]).astype(u.dtype)
+    new_state = ({"conv": new_conv, "ssm": h_final}
+                 if state is not None else None)
+    return out, new_state
+
+
+# -------------------------------------------------------------- mLSTM block
+def mlstm_init(key, d_model: int, n_heads: int, dtype=jnp.float32
+               ) -> Dict[str, jax.Array]:
+    d_in = 2 * d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d_model, d_in), dtype),
+        "wk": dense_init(ks[1], (d_model, d_in), dtype),
+        "wv": dense_init(ks[2], (d_model, d_in), dtype),
+        "wi": dense_init(ks[3], (d_model, n_heads), dtype),
+        "wf": dense_init(ks[4], (d_model, n_heads), dtype),
+        "wo_gate": dense_init(ks[5], (d_model, d_in), dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (d_in, d_model),
+                               dtype),
+    }
+
+
+def mlstm_apply(p: Dict[str, jax.Array], x: jax.Array, n_heads: int, *,
+                chunk: int = 128, state: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Matrix-memory LSTM as gated linear attention (chunkwise parallel)."""
+    B, S, D = x.shape
+    d_in = 2 * D
+    hd = d_in // n_heads
+    q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, n_heads, hd) / math.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, S, n_heads, hd)
+    f = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))   # (B,S,H)
+    i = jax.nn.sigmoid((x @ p["wi"]).astype(jnp.float32))       # (B,S,H)
+
+    # numerator: state C = sum decay * i * (k (x) v); y_num = q . C
+    # denominator: n = sum decay * i * k; y_den = |q . n|
+    # Both are SSD scans with (Bm=k_head, Cm=q_head) per head — but SSD
+    # shares Bm/Cm across heads, so fold heads into the batch dim.
+    def per_head_ssd(xh, kh, qh, h0):
+        # xh: (B,S,H,P) -> (B*H? ) reshape: treat each head independently
+        xf = jnp.moveaxis(xh, 2, 1).reshape(B * n_heads, S, 1, xh.shape[-1])
+        kf = jnp.moveaxis(kh, 2, 1).reshape(B * n_heads, S, hd)
+        qf = jnp.moveaxis(qh, 2, 1).reshape(B * n_heads, S, hd)
+        lf = jnp.moveaxis(f, 2, 1).reshape(B * n_heads, S, 1)
+        df = jnp.moveaxis(i, 2, 1).reshape(B * n_heads, S, 1)
+        if S == 1 and state is not None:
+            a = jnp.exp(lf[:, 0]).astype(jnp.float32)
+            upd = jnp.einsum("bd,bhp->bhdp", kf[:, 0].astype(jnp.float32),
+                             (xf[:, 0] * df[:, 0, :, None]).astype(
+                                 jnp.float32))
+            h = h0 * a[..., None, None] + upd
+            y = jnp.einsum("bd,bhdp->bhp", qf[:, 0].astype(jnp.float32),
+                           h)[:, None]
+            return y.reshape(B, n_heads, 1, xh.shape[-1]).transpose(
+                0, 2, 1, 3), h
+        y, hf = ssd_chunked(xf, lf, df, kf, qf, chunk=min(chunk, S), h0=h0)
+        y = y.reshape(B, n_heads, S, 1, xh.shape[-1])[:, :, :, 0]
+        return jnp.moveaxis(y, 1, 2), hf
+
+    h0_num = state["num"] if state else None
+    h0_den = state["den"] if state else None
+    num, h_num = per_head_ssd(v, k, q, h0_num)
+    ones = jnp.ones((B, S, n_heads, 1), x.dtype)
+    den, h_den = per_head_ssd(ones, k, q, h0_den)
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)).astype(x.dtype)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    out = ((y.reshape(B, S, d_in) * o) @ p["out_proj"]).astype(x.dtype)
+    new_state = ({"num": h_num, "den": h_den}
+                 if state is not None else None)
+    return out, new_state
+
+
+# -------------------------------------------------------------- sLSTM block
+def slstm_init(key, d_model: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 8)
+    p = {}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[2 * gi], (d_model, d_model), dtype)
+        p[f"r_{g}"] = dense_init(ks[2 * gi + 1], (d_model, d_model), dtype,
+                                 scale=0.5 / math.sqrt(d_model))
+        p[f"b_{g}"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def slstm_apply(p: Dict[str, jax.Array], x: jax.Array, *,
+                state: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Strictly sequential scalar-memory LSTM (lax.scan over time)."""
+    B, S, D = x.shape
+    if state is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+    else:
+        h0, c0, n0 = state["h"], state["c"], state["n"]
+
+    wx = {g: (x @ p[f"w_{g}"]) + p[f"b_{g}"] for g in ("i", "f", "z", "o")}
+
+    def step(carry, xs):
+        h, c, n = carry
+        pre = {g: xs[g].astype(jnp.float32)
+               + (h @ p[f"r_{g}"].astype(jnp.float32)) for g in wx}
+        # sigmoid input gate (exponential-gate stabilizer omitted; see
+        # module docstring)
+        i = jax.nn.sigmoid(pre["i"])
+        f = jax.nn.sigmoid(pre["f"])
+        z = jnp.tanh(pre["z"])
+        o = jax.nn.sigmoid(pre["o"])
+        c = f * c + i * z
+        n = f * n + i
+        h = o * (c / jnp.maximum(n, 1.0))
+        return (h, c, n), h
+
+    xs = {g: jnp.moveaxis(v, 0, 1) for g, v in wx.items()}  # (S,B,D)
+    (h, c, n), hs = jax.lax.scan(step, (h0, c0, n0), xs)
+    out = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,D)
+    new_state = {"h": h, "c": c, "n": n} if state is not None else None
+    return out, new_state

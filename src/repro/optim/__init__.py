@@ -1,0 +1,14 @@
+"""Optimizers (pure JAX, optax-style minimal API)."""
+from .adamw import adamw
+from .adafactor import adafactor
+from .schedule import cosine_schedule, clip_by_global_norm
+
+__all__ = ["adamw", "adafactor", "cosine_schedule", "clip_by_global_norm"]
+
+
+def for_arch(param_count: int, lr=None):
+    """Deployment policy: factored optimizer state above 20B params (the
+    Adam moments of a 480B model do not fit v5e HBM — DESIGN.md §6)."""
+    if param_count > 20e9:
+        return adafactor(lr or 1e-3)
+    return adamw(lr or 3e-4)

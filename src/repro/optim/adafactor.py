@@ -1,0 +1,68 @@
+"""Adafactor (factored second moment, no first moment) — the optimizer
+for >=20B archs: O(sum of dims) state instead of O(prod of dims), which is
+what lets arctic-480b train state fit per-chip HBM (DESIGN.md §6)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def state_for(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(state_for, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(count)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                c = vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(r * c, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        leaves = lambda tree: jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, dict) and (
+                "v" in x or "vr" in x))
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = leaves(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_f = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"f": new_f, "count": count}
+
+    return Optimizer(init, update)

@@ -1,0 +1,12 @@
+"""Discrete-event emulation of the paper's testbed (Grid'5000 + Distem +
+YCSB), in virtual time, driving the real EdgeKV protocol objects."""
+from .events import Environment, Resource, Timeout
+from .network import EDGE_SETTING, CLOUD_SETTING, SETTINGS, NetworkModel, Link
+from .ycsb import YCSBWorkload, Op
+from .cluster import SimEdgeKV, ServiceParams
+
+__all__ = [
+    "Environment", "Resource", "Timeout", "EDGE_SETTING", "CLOUD_SETTING",
+    "SETTINGS", "NetworkModel", "Link", "YCSBWorkload", "Op", "SimEdgeKV",
+    "ServiceParams",
+]

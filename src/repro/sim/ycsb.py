@@ -1,0 +1,100 @@
+"""YCSB-style workload generation (paper §5.2.3).
+
+Workload A: 50% reads / 50% updates over a preloaded key space (10,000
+records by default, ~1 KB values — YCSB's 10 fields x 100 B). Request
+distributions reproduced as the paper configures them:
+
+* ``uniform`` — every key equally likely.
+* ``zipfian`` — the paper's hotset configuration: 20% of the keys (chosen
+  at random) receive 80% of the operations.
+* ``latest`` — recently inserted keys are more popular; popularity decays
+  zipf-like with recency rank.
+
+Each generated op also draws a *data type*: global with probability
+``p_global`` (the paper's 'proportion of global data' parameter), else
+local — mirroring the paper's modified YCSB database-interface layer that
+stores every pair in both tiers and randomly targets one per request.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+RECORD_BYTES = 1000  # YCSB default record size
+REQ_BYTES = 64       # request header / key
+
+
+@dataclass
+class Op:
+    kind: str      # 'read' | 'update' | 'insert'
+    key: str
+    dtype: str     # 'local' | 'global'
+    value_bytes: int = RECORD_BYTES
+
+
+class YCSBWorkload:
+    def __init__(
+        self,
+        n_records: int = 10_000,
+        read_prop: float = 0.5,
+        update_prop: float = 0.5,
+        distribution: str = "uniform",
+        p_global: float = 0.5,
+        hotset_frac: float = 0.2,
+        hot_op_frac: float = 0.8,
+        zipf_s: float = 0.99,
+        seed: int = 0,
+    ):
+        if abs(read_prop + update_prop - 1.0) > 1e-9:
+            raise ValueError("workload A proportions must sum to 1")
+        if distribution not in ("uniform", "zipfian", "latest"):
+            raise ValueError(distribution)
+        self.n = n_records
+        self.read_prop = read_prop
+        self.distribution = distribution
+        self.p_global = p_global
+        self.rng = random.Random(seed)
+        self.keys = [f"user{i:08d}" for i in range(n_records)]
+        order = list(range(n_records))
+        self.rng.shuffle(order)
+        k = max(1, int(hotset_frac * n_records))
+        self.hotset = order[:k]
+        self.coldset = order[k:]
+        self.hot_op_frac = hot_op_frac
+        # precompute zipf CDF over recency ranks for 'latest'
+        self._latest_weights = [1.0 / ((r + 1) ** zipf_s)
+                                for r in range(n_records)]
+        tot = sum(self._latest_weights)
+        acc, cdf = 0.0, []
+        for w in self._latest_weights:
+            acc += w / tot
+            cdf.append(acc)
+        self._latest_cdf = cdf
+
+    # ------------------------------------------------------------ sampling
+    def _draw_index(self) -> int:
+        if self.distribution == "uniform":
+            return self.rng.randrange(self.n)
+        if self.distribution == "zipfian":
+            if self.rng.random() < self.hot_op_frac:
+                return self.hotset[self.rng.randrange(len(self.hotset))]
+            return self.coldset[self.rng.randrange(len(self.coldset))]
+        # latest: rank 0 = newest (highest index, insertion order)
+        import bisect
+        r = bisect.bisect_left(self._latest_cdf, self.rng.random())
+        return self.n - 1 - min(r, self.n - 1)
+
+    def load_ops(self) -> List[Op]:
+        """Load phase: insert every record (both tiers are populated by the
+        DB layer; dtype here marks the copy targeted first)."""
+        return [Op("insert", k, "local") for k in self.keys]
+
+    def next_op(self) -> Op:
+        idx = self._draw_index()
+        kind = "read" if self.rng.random() < self.read_prop else "update"
+        dtype = "global" if self.rng.random() < self.p_global else "local"
+        return Op(kind, self.keys[idx], dtype)
+
+    def run_ops(self, count: int) -> List[Op]:
+        return [self.next_op() for _ in range(count)]

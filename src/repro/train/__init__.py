@@ -1,0 +1,3 @@
+from .steps import make_train_step, make_prefill_step, make_decode_step
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]

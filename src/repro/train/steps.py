@@ -1,0 +1,61 @@
+"""Jit-able step functions: train_step / prefill_step / decode_step.
+
+Built once per (arch, options) via ``make_*``; the launcher and the
+dry-run lower these under a mesh with the sharding trees from
+``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import forward_train, prefill, decode_step
+from repro.optim import for_arch
+from repro.optim.schedule import clip_by_global_norm
+
+
+def make_train_step(cfg: ArchConfig, optimizer=None, *,
+                    dispatch: str = "einsum", remat: bool = True,
+                    chunk: int = 1024, grad_clip: float = 1.0
+                    ) -> Tuple[Callable, Any]:
+    opt = optimizer or for_arch(cfg.param_count())
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_train(p, cfg, batch, dispatch=dispatch,
+                                    remat=remat, chunk=chunk))(params)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig, *, dispatch: str = "einsum",
+                      max_len: Optional[int] = None,
+                      chunk: int = 1024) -> Callable:
+    def prefill_step(params, batch):
+        kw = {}
+        if "enc_frames" in batch:
+            kw["enc_frames"] = batch["enc_frames"]
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, cache = prefill(params, cfg, batch["tokens"],
+                                max_len=max_len, dispatch=dispatch,
+                                chunk=chunk, **kw)
+        # serving returns only the last-position logits (next-token head)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, dispatch: str = "einsum") -> Callable:
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, dispatch=dispatch)
+
+    return serve_step

@@ -1,0 +1,61 @@
+"""Verify the paper's §6.6 complexity analysis against the implementation."""
+import numpy as np
+import pytest
+
+from repro.core import EdgeKVCluster, LOCAL, GLOBAL
+from repro.core.hashring import ChordRing
+
+
+def test_space_complexity_storage_node():
+    """Edge node space = O(L*S + G*T/m): every node of a group holds all
+    the group's local keys plus ~1/m of the global keys."""
+    m = 4
+    c = EdgeKVCluster([3] * m, seed=9)
+    L, G = 30, 120
+    for i in range(L):
+        c.put(f"loc{i}", "x" * 10, LOCAL, client_group="g0")
+    for i in range(G):
+        c.put(f"glob{i}", "x" * 10, GLOBAL, client_group=f"g{i % m}")
+    g0 = c.groups["g0"]
+    lead = g0.raft.run_until_leader()
+    store = g0.storage[lead.id]
+    assert len(store.stores[LOCAL]) == L          # all local keys
+    n_global = len(store.stores[GLOBAL])
+    assert n_global < G                           # only its ring share...
+    assert n_global > 0
+    total = sum(
+        len(grp.storage[grp.raft.run_until_leader().id].stores[GLOBAL])
+        for grp in c.groups.values())
+    assert total == G                             # ...and shares partition G
+
+
+def test_gateway_stores_no_data_only_routing():
+    """Gateway space = O(log m): finger tables, never key-value pairs."""
+    c = EdgeKVCluster([3, 3, 3], seed=1)
+    c.put("k", "v", GLOBAL, client_group="g0")
+    for gw in c.gateways.values():
+        assert not hasattr(gw, "stores")
+    ring = ChordRing(virtual_nodes=1)
+    sizes = {}
+    for m in (8, 64):
+        r = ChordRing(virtual_nodes=1)
+        for i in range(m):
+            r.add_node(f"gw{i}")
+        sizes[m] = r.finger_table_size("gw0")
+    # routing state grows ~log(m): 8x nodes -> far less than 8x state
+    assert sizes[64] <= sizes[8] * 4
+
+
+def test_time_complexity_local_vs_global():
+    """Local access never touches the overlay; global may add O(log m)
+    hops — measured as recorded DHT path lengths in the sim."""
+    from repro.sim import SimEdgeKV
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 8)
+    sim.run_closed_loop(threads_per_client=10, ops_per_client=200,
+                        workload_kw=dict(p_global=0.5))
+    local = [r for r in sim.records if r.dtype == "local"]
+    glob = [r for r in sim.records if r.dtype == "global"]
+    assert all(r.remote_hops == 0 for r in local)
+    assert max(r.remote_hops for r in glob) <= 2 * np.log2(8) + 2
+    assert np.mean([r.latency for r in glob]) > np.mean(
+        [r.latency for r in local])

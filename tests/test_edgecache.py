@@ -1,0 +1,109 @@
+"""Two-tier page store + expert placement tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashring import ChordRing
+from repro.edgecache import (PagePoolManager, content_key,
+                             expert_placement, apply_expert_permutation)
+
+
+def make_mgr(n_slots=64, page=8, groups=("g0", "g1", "g2")):
+    ring = ChordRing(virtual_nodes=8)
+    for g in groups:
+        ring.add_node(g)
+    return PagePoolManager("g0", n_slots, page, ring)
+
+
+def test_local_pages_unique_slots():
+    m = make_mgr()
+    r1 = m.alloc_local("seq1", 3)
+    r2 = m.alloc_local("seq2", 3)
+    slots = [r.slot for r in r1 + r2]
+    assert len(set(slots)) == 6
+    assert all(r.tier == "local" for r in r1)
+
+
+def test_global_prefix_dedup():
+    m = make_mgr()
+    prefix = np.arange(24, dtype=np.int32)  # 3 pages of 8
+    a = m.register_global("seqA", prefix)
+    b = m.register_global("seqB", prefix)
+    assert [r.slot for r in a] == [r.slot for r in b]  # dedup: same slots
+    assert m.stats["dedup_hits"] == 3
+    assert m.used_slots == 3  # one copy only
+
+
+def test_release_refcounts_global_pages():
+    m = make_mgr()
+    prefix = np.arange(16, dtype=np.int32)
+    m.register_global("seqA", prefix)
+    m.register_global("seqB", prefix)
+    m.release("seqA")
+    assert m.used_slots == 2          # still referenced by seqB
+    m.release("seqB")
+    assert m.used_slots == 0
+    assert m.stats["evicted"] == 2
+
+
+def test_page_table_layout():
+    m = make_mgr()
+    m.register_global("s", np.arange(16, dtype=np.int32))
+    m.alloc_local("s", 2)
+    pt = m.page_table("s", max_pages=8)
+    assert pt.shape == (8,)
+    assert len(set(pt[:4])) == 4      # 2 global + 2 local distinct slots
+
+
+def test_ring_ownership_distribution():
+    m = make_mgr()
+    owners = set()
+    for i in range(30):
+        refs = m.register_global(f"s{i}", np.arange(
+            i * 8, i * 8 + 8, dtype=np.int32))
+        owners.update(r.owner_group for r in refs)
+    assert len(owners) >= 2           # keys spread over groups
+
+
+def test_pool_exhaustion_raises():
+    m = make_mgr(n_slots=2)
+    m.alloc_local("s", 2)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        m.alloc_local("s", 1)
+
+
+# ---------------------------------------------------------------- experts
+def test_expert_placement_capacity_exact():
+    perm = expert_placement(128, 16)
+    assert sorted(perm.tolist()) == list(range(128))  # a permutation
+    # each shard gets exactly 8
+    assert len(perm) == 128
+
+
+def test_expert_placement_deterministic():
+    a = expert_placement(64, 8)
+    b = expert_placement(64, 8)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_expert_placement_weighted_changes_layout():
+    a = expert_placement(64, 8)
+    b = expert_placement(64, 8, shard_weights=[4.0] + [1.0] * 7)
+    assert not np.array_equal(a, b)
+
+
+def test_apply_permutation_roundtrip():
+    import jax.numpy as jnp
+    perm = expert_placement(8, 4)
+    w = {"w_up": jnp.arange(8 * 3 * 2).reshape(8, 3, 2)}
+    out = apply_expert_permutation(w, perm)
+    np.testing.assert_array_equal(np.asarray(out["w_up"][0]),
+                                  np.asarray(w["w_up"][perm[0]]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(16, 4), (32, 8), (128, 16), (8, 8)]))
+def test_property_placement_is_balanced_permutation(ec):
+    E, S = ec
+    perm = expert_placement(E, S)
+    assert sorted(perm.tolist()) == list(range(E))

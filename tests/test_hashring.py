@@ -1,0 +1,132 @@
+"""Chord ring unit + property tests: lookup correctness, O(log m) hops,
+consistent-hashing remap bound, virtual-node balance."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashring import ChordRing, stable_hash, RING_SIZE
+
+
+def make_ring(m: int, vnodes: int = 1) -> ChordRing:
+    r = ChordRing(virtual_nodes=vnodes)
+    for i in range(m):
+        r.add_node(f"gw{i}")
+    return r
+
+
+def brute_force_owner(ring: ChordRing, key: str) -> str:
+    kh = stable_hash(key)
+    best, best_dist = None, None
+    for nid, vhs in ring.nodes.items():
+        for vh in vhs:
+            dist = (vh - kh) % RING_SIZE
+            if best_dist is None or dist < best_dist:
+                best, best_dist = nid, dist
+    return best
+
+
+def test_locate_matches_brute_force():
+    ring = make_ring(16, vnodes=4)
+    for i in range(500):
+        key = f"key-{i}"
+        assert ring.locate(key) == brute_force_owner(ring, key)
+
+
+def test_route_reaches_owner_from_every_start():
+    ring = make_ring(12)
+    for i in range(50):
+        key = f"k{i}"
+        owner = ring.locate(key)
+        for start in list(ring.nodes)[:4]:
+            path = ring.route(start, key)
+            assert path[-1] == owner
+            assert path[0] == start
+
+
+def test_route_hop_bound_logarithmic():
+    """Chord promises O(log m) hops; check a generous c*log2(m)+c bound."""
+    for m in (4, 16, 64, 128):
+        ring = make_ring(m)
+        bound = 2 * math.log2(m) + 4
+        worst = 0
+        for i in range(200):
+            path = ring.route("gw0", f"key-{i}")
+            worst = max(worst, len(path) - 1)
+        assert worst <= bound, (m, worst, bound)
+
+
+def test_finger_state_logarithmic():
+    for m in (8, 32, 128):
+        ring = make_ring(m)
+        bound = 4 * math.log2(m) + 8
+        assert ring.finger_table_size("gw0") <= bound
+
+
+def test_consistent_hashing_remap_bound():
+    """Adding one node to m moves ~K/(m+1) keys; assert <= 3x expectation."""
+    keys = [f"key-{i}" for i in range(3000)]
+    for m in (8, 16):
+        before = make_ring(m, vnodes=8)
+        after = make_ring(m, vnodes=8)
+        after.add_node("gw-new")
+        moved = before.moved_keys(keys, after)
+        expected = len(keys) / (m + 1)
+        assert moved <= 3 * expected, (m, moved, expected)
+        # and removal moves nothing except the removed node's keys
+        after.remove_node("gw-new")
+        assert before.moved_keys(keys, after) == 0
+
+
+def test_virtual_nodes_improve_balance():
+    keys = [f"key-{i}" for i in range(5000)]
+    flat = make_ring(10, vnodes=1).key_distribution(keys)
+    virt = make_ring(10, vnodes=32).key_distribution(keys)
+
+    def imbalance(d):
+        mean = sum(d.values()) / len(d)
+        return max(d.values()) / mean
+
+    assert imbalance(virt) < imbalance(flat)
+    assert imbalance(virt) < 1.6  # well balanced with 32 vnodes
+
+
+def test_weighted_virtual_nodes():
+    ring = ChordRing(virtual_nodes=16)
+    ring.add_node("big", weight=3.0)
+    ring.add_node("small", weight=1.0)
+    dist = ring.key_distribution([f"k{i}" for i in range(4000)])
+    assert dist["big"] > 2.0 * dist["small"]
+
+
+def test_successor_group_rule():
+    ring = make_ring(5)
+    for nid in list(ring.nodes):
+        succ = ring.successor_group(nid)
+        assert succ != nid
+        assert succ in ring.nodes
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=50, unique=True),
+       st.text(min_size=1, max_size=20))
+def test_property_locate_is_stable_and_total(node_ids, key):
+    ring = ChordRing()
+    for nid in node_ids:
+        ring.add_node(f"n{nid}")
+    owner1 = ring.locate(key)
+    owner2 = ring.locate(key)
+    assert owner1 == owner2
+    assert owner1 in ring.nodes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**32 - 1))
+def test_property_remove_then_add_is_identity(m, salt):
+    ring = make_ring(m, vnodes=4)
+    keys = [f"{salt}-{i}" for i in range(200)]
+    before = {k: ring.locate(k) for k in keys}
+    ring.remove_node("gw1")
+    ring.add_node("gw1")
+    after = {k: ring.locate(k) for k in keys}
+    assert before == after

@@ -1,0 +1,100 @@
+"""EdgeKV cluster semantics: Algorithms 1-2, local/global separation,
+linearizable reads, backup-group failover, gateway caching."""
+import pytest
+
+from repro.core import EdgeKVCluster, LOCAL, GLOBAL
+from repro.core.backup import backup_lag
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return EdgeKVCluster([3, 3, 3], seed=42)
+
+
+def test_local_data_stays_in_group(cluster):
+    cluster.put("user:1", "alice", LOCAL, client_group="g0")
+    r = cluster.get("user:1", LOCAL, client_group="g0")
+    assert r.ok and r.value == "alice"
+    # not visible from another group's local store
+    r2 = cluster.get("user:1", LOCAL, client_group="g1")
+    assert r2.value is None
+    # and never leaked into any global store
+    for g in cluster.groups.values():
+        for st in g.storage.values():
+            assert "user:1" not in st.stores[GLOBAL]
+
+
+def test_global_data_visible_everywhere(cluster):
+    cluster.put("city:temp", 21.5, GLOBAL, client_group="g0")
+    for cg in ("g0", "g1", "g2"):
+        r = cluster.get("city:temp", GLOBAL, client_group=cg)
+        assert r.ok and r.value == 21.5
+
+
+def test_global_key_stored_only_at_owner(cluster):
+    key = "owner-check-key"
+    cluster.put(key, "v", GLOBAL, client_group="g1")
+    owner_gw = cluster.ring.locate(key)
+    owner_group = cluster.gateways[owner_gw].group
+    holders = []
+    for gid, g in cluster.groups.items():
+        leader = g.raft.run_until_leader()
+        if g.storage[leader.id].get(GLOBAL, key) is not None:
+            holders.append(gid)
+    assert holders == [owner_group.id]
+
+
+def test_put_get_delete_roundtrip(cluster):
+    cluster.put("tmp", 1, GLOBAL, client_group="g2")
+    assert cluster.get("tmp", GLOBAL, client_group="g0").value == 1
+    cluster.delete("tmp", GLOBAL, client_group="g1")
+    assert cluster.get("tmp", GLOBAL, client_group="g0").value is None
+
+
+def test_update_overwrites(cluster):
+    cluster.put("cnt", 1, LOCAL, client_group="g0")
+    cluster.put("cnt", 2, LOCAL, client_group="g0")
+    assert cluster.get("cnt", LOCAL, client_group="g0").value == 2
+
+
+def test_write_survives_minority_crash():
+    c = EdgeKVCluster([3], seed=7)
+    c.put("k", "v0", LOCAL, client_group="g0")
+    c.groups["g0"].crash_minority()
+    c.put("k", "v1", LOCAL, client_group="g0")
+    assert c.get("k", LOCAL, client_group="g0").value == "v1"
+
+
+def test_quorum_size_reported(cluster):
+    r = cluster.put("qk", "qv", LOCAL, client_group="g0")
+    assert r.quorum_size == 2  # majority of 3
+
+
+def test_backup_group_serves_reads_after_owner_loss():
+    c = EdgeKVCluster([3, 3, 3], seed=11, backup_groups=True)
+    key = "failover-key"
+    c.put(key, "precious", GLOBAL, client_group="g0")
+    owner_gid = c.gateways[c.ring.locate(key)].group.id
+    # let learner replication drain
+    for _ in range(10):
+        c.groups[owner_gid].raft.step()
+    assert backup_lag(c, owner_gid) == 0
+    # kill the owner group (majority down -> unreachable)
+    c.groups[owner_gid].crash_majority()
+    r = c.get(key, GLOBAL, client_group="g0")
+    assert r.ok and r.value == "precious"
+    assert getattr(r, "from_backup", False)
+    # writes must FAIL while the owner is down (states must not diverge)
+    w = c.put(key, "new-value", GLOBAL, client_group="g0")
+    assert not w.ok
+
+
+def test_gateway_cache_hits():
+    c = EdgeKVCluster([3, 3, 3], seed=3, gateway_cache=64)
+    c.put("hot", 1, GLOBAL, client_group="g0")
+    gw = c.gateways["gw0"]
+    before = gw.lookups
+    for _ in range(5):
+        c.get("hot", GLOBAL, client_group="g0")
+    assert gw.lookups == before  # all served from the location cache
+    assert gw.cache_hits >= 5

@@ -1,0 +1,67 @@
+"""Integration: EdgeKV page pool -> Pallas paged_attention == contiguous
+attention. This is the paper's storage module driving real attention
+compute: local + deduplicated global pages scattered through a pool must
+produce identical attention output to a contiguous KV cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashring import ChordRing
+from repro.edgecache import PagePoolManager
+from repro.kernels.paged_attention import paged_attention
+
+
+def test_scattered_pages_match_contiguous():
+    B, H, K, hd = 2, 4, 2, 16
+    page, n_ctx = 8, 32            # 4 pages per sequence
+    n_slots = 64
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 4)
+
+    # contiguous ground-truth KV per sequence
+    k_full = jax.random.normal(ks[0], (B, K, n_ctx, hd))
+    v_full = jax.random.normal(ks[1], (B, K, n_ctx, hd))
+    q = jax.random.normal(ks[2], (B, H, hd))
+
+    # EdgeKV control plane: first 2 pages are a shared global prefix
+    ring = ChordRing(virtual_nodes=4)
+    for g in range(3):
+        ring.add_node(f"g{g}")
+    pool_mgr = PagePoolManager("g0", n_slots, page, ring)
+    shared_tokens = np.arange(2 * page, dtype=np.int32)
+    # make both sequences' first 2 pages identical so dedup applies
+    k_full = k_full.at[1, :, :2 * page].set(k_full[0, :, :2 * page])
+    v_full = v_full.at[1, :, :2 * page].set(v_full[0, :, :2 * page])
+
+    tables = []
+    k_pool = np.zeros((K, n_slots, page, hd), np.float32)
+    v_pool = np.zeros((K, n_slots, page, hd), np.float32)
+    for b in range(B):
+        refs = (pool_mgr.register_global(f"s{b}", shared_tokens)
+                + pool_mgr.alloc_local(f"s{b}", 2))
+        pt = pool_mgr.page_table(f"s{b}", max_pages=4)
+        tables.append(pt)
+        for i, r in enumerate(refs):
+            k_pool[:, r.slot] = np.asarray(
+                k_full[b, :, i * page:(i + 1) * page])
+            v_pool[:, r.slot] = np.asarray(
+                v_full[b, :, i * page:(i + 1) * page])
+    # dedup really happened: both sequences' first two slots coincide
+    assert tables[0][0] == tables[1][0] and tables[0][1] == tables[1][1]
+    assert pool_mgr.used_slots == 2 + 2 * B   # 2 shared + 2 local each
+
+    page_table = jnp.asarray(np.stack(tables))
+    lengths = jnp.full((B,), n_ctx)
+    out_paged = paged_attention(q, jnp.asarray(k_pool),
+                                jnp.asarray(v_pool), page_table, lengths,
+                                use_pallas=True, interpret=True)
+
+    # contiguous reference: a trivial pool where slot b holds sequence b's
+    # whole context as one big page
+    kp2 = jnp.moveaxis(k_full, 1, 0)          # (K, B, ctx, hd)
+    vp2 = jnp.moveaxis(v_full, 1, 0)
+    pt2 = jnp.arange(B)[:, None]
+    out_ref = paged_attention(q, kp2, vp2, pt2, lengths,
+                              use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_ref),
+                               rtol=2e-5, atol=2e-5)

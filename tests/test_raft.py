@@ -1,0 +1,113 @@
+"""Raft RSM tests: election safety, log replication, quorum commit,
+minority-failure tolerance, learner (non-voting) semantics."""
+import pytest
+
+from repro.core.raft import LocalCluster, RaftNode, LEADER
+
+
+def test_elects_single_leader():
+    c = LocalCluster(["a", "b", "c"])
+    lead = c.run_until_leader()
+    leaders = [n for n in c.nodes.values() if n.role == LEADER]
+    assert len(leaders) == 1
+    assert leaders[0].id == lead.id
+
+
+def test_commit_replicates_to_all():
+    c = LocalCluster(["a", "b", "c"])
+    c.propose(("put", "local", "k1", "v1"))
+    c.propose(("put", "local", "k2", "v2"))
+    for _ in range(10):
+        c.step()
+    for n in c.nodes.values():
+        assert [cmd for cmd in n.applied] == [
+            ("put", "local", "k1", "v1"), ("put", "local", "k2", "v2")]
+
+
+def test_tolerates_minority_failure():
+    c = LocalCluster(["a", "b", "c"])
+    lead = c.run_until_leader()
+    victim = next(nid for nid in c.nodes if nid != lead.id)
+    c.crash(victim)
+    idx = c.propose("after-crash")
+    assert idx >= 1
+    live = [n for nid, n in c.nodes.items() if nid not in c.down]
+    assert all("after-crash" in n.applied for n in live if n.commit_index >= idx)
+
+
+def test_majority_failure_blocks_commit():
+    c = LocalCluster(["a", "b", "c"])
+    lead = c.run_until_leader()
+    victims = [nid for nid in c.nodes if nid != lead.id]
+    for v in victims:
+        c.crash(v)
+    idx = lead.client_propose("never-commits", c.now)
+    for _ in range(30):
+        c.step()
+    assert lead.commit_index < idx
+
+
+def test_leader_failover_preserves_log():
+    c = LocalCluster(["a", "b", "c", "d", "e"])
+    c.propose("x1")
+    lead = c.run_until_leader()
+    c.crash(lead.id)
+    new_lead = c.run_until_leader()
+    assert new_lead.id != lead.id
+    # committed entry survives (Leader Completeness)
+    c.propose("x2")
+    assert "x1" in [e[1] for e in new_lead.log]
+    assert "x2" in [e[1] for e in new_lead.log]
+
+
+def test_election_safety_across_seeds():
+    """At most one leader per term, under repeated elections."""
+    for seed in range(5):
+        c = LocalCluster(["a", "b", "c"], seed=seed)
+        c.run_until_leader()
+        by_term = {}
+        for n in c.nodes.values():
+            if n.role == LEADER:
+                assert by_term.setdefault(n.term, n.id) == n.id
+
+
+def test_learner_receives_but_does_not_vote():
+    c = LocalCluster(["a", "b", "c"], learners=("backup1", "backup2"))
+    c.propose("v1")
+    for _ in range(10):
+        c.step()
+    b = c.nodes["backup1"]
+    assert "v1" in b.applied         # learner applied the entry
+    assert b.role == "learner"
+    assert not b.is_voter
+    # learners never become candidates even if leader dies
+    lead = c.run_until_leader()
+    assert lead.id in ("a", "b", "c")
+
+
+def test_learner_not_counted_in_quorum():
+    """2 voters + 3 learners: killing 1 voter must block commits (quorum of
+    2 voters needs both), even though 4 of 5 raft members are alive."""
+    c = LocalCluster(["a", "b"], learners=("l1", "l2", "l3"))
+    lead = c.run_until_leader()
+    other = "a" if lead.id == "b" else "b"
+    c.crash(other)
+    idx = lead.client_propose("stuck", c.now)
+    for _ in range(30):
+        c.step()
+    assert lead.commit_index < idx
+
+
+def test_log_matching_after_partition_heal():
+    c = LocalCluster(["a", "b", "c"])
+    lead = c.run_until_leader()
+    follower = next(nid for nid in c.nodes if nid != lead.id)
+    c.crash(follower)
+    c.propose("during-partition-1")
+    c.propose("during-partition-2")
+    c.recover(follower)
+    for _ in range(30):
+        c.step()
+    f = c.nodes[follower]
+    l = c.leader()
+    assert f.log[:l.commit_index] == l.log[:l.commit_index]

@@ -1,0 +1,133 @@
+"""Testbed-emulation tests: determinism, protocol timing sanity, and the
+paper's headline claims (EXPERIMENTS.md §Repro reads from the same code)."""
+import math
+
+import pytest
+
+from repro.sim import SimEdgeKV, ServiceParams, YCSBWorkload
+from repro.sim.experiments import (fig5_6_locality, headline_claims)
+
+
+def small(setting, p_global, **kw):
+    sim = SimEdgeKV(setting=setting, seed=1)
+    sim.run_closed_loop(threads_per_client=20, ops_per_client=400,
+                        workload_kw=dict(p_global=p_global, **kw))
+    return sim
+
+
+def test_deterministic_replay():
+    a = small("edge", 0.5)
+    b = small("edge", 0.5)
+    assert [r.latency for r in a.records] == [r.latency for r in b.records]
+
+
+def test_edge_beats_cloud_locally():
+    e = small("edge", 0.0)
+    c = small("cloud", 0.0)
+    assert e.mean_latency(kind="update") < c.mean_latency(kind="update")
+    assert e.throughput() > c.throughput()
+
+
+def test_global_slower_than_local_on_edge():
+    e_loc = small("edge", 0.0)
+    e_glob = small("edge", 1.0)
+    assert e_glob.mean_latency() > e_loc.mean_latency()
+
+
+def test_cloud_insensitive_to_locality():
+    """In the cloud setting all nodes are colocated: global routing adds
+    only ~0.05 ms hops, so locality barely matters (paper's premise)."""
+    c_loc = small("cloud", 0.0)
+    c_glob = small("cloud", 1.0)
+    ratio = c_glob.mean_latency() / c_loc.mean_latency()
+    assert ratio < 1.1
+
+
+def test_write_latency_floor_edge():
+    """An unloaded local edge write must cost at least the protocol floor:
+    cli-st RTT (10ms) + quorum RTT (>=2*2ms) + commit service."""
+    sim = SimEdgeKV(setting="edge", seed=3)
+    sim.run_closed_loop(threads_per_client=1, ops_per_client=50,
+                        workload_kw=dict(p_global=0.0))
+    lat = sim.mean_latency(kind="update")
+    assert lat >= (10 + 4 + 0.9) * 1e-3 * 0.99
+    assert lat <= 30e-3  # and nowhere near cloud numbers
+
+
+def test_dht_hops_recorded_for_global_ops():
+    sim = small("edge", 1.0)
+    hops = [r.remote_hops for r in sim.records]
+    assert max(hops) >= 1          # some keys live on remote groups
+    assert all(h <= 3 for h in hops)  # 3-gateway ring: short paths
+
+
+def test_remote_fraction_matches_ring():
+    """~2/3 of global keys should be owned by a remote group (3 groups)."""
+    sim = small("edge", 1.0)
+    remote = sum(1 for r in sim.records if r.remote_hops > 0)
+    frac = remote / len(sim.records)
+    assert 0.45 < frac < 0.85
+
+
+@pytest.mark.slow
+def test_headline_claims_match_paper():
+    checks = headline_claims(ops_per_client=3000)
+    failures = [c for c in checks if not c.ok]
+    assert not failures, [
+        f"{c.name}: paper={c.paper} ours={c.ours:.1f}" for c in failures]
+
+
+@pytest.mark.slow
+def test_locality_monotone_degradation():
+    """Fig 5 direction: more global traffic => worse write latency. (The
+    paper's 50->100 flattening is a documented partial deviation — see
+    EXPERIMENTS.md §Repro; with vnodes>=8 our curve flattens too.)"""
+    rows = fig5_6_locality(ops_per_client=1500)
+    edge = {r["pct_global"]: r for r in rows if r["setting"] == "edge"}
+    assert edge[0]["write_latency_ms"] < edge[50]["write_latency_ms"] \
+        < edge[100]["write_latency_ms"]
+    cloud = {r["pct_global"]: r for r in rows if r["setting"] == "cloud"}
+    for pct in (0, 50, 100):
+        assert edge[pct]["write_latency_ms"] < cloud[pct]["write_latency_ms"]
+
+
+@pytest.mark.slow
+def test_gateway_cache_helps_at_scale():
+    """Beyond-paper evaluation of §7.2: the gateway location cache saves
+    O(log m) routing on hot keys — material once the ring is deep and
+    keys repeat."""
+    def run(cache):
+        sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 16,
+                        gateway_cache=cache)
+        sim.run_closed_loop(
+            threads_per_client=50, ops_per_client=2500,
+            workload_kw=dict(p_global=0.5, distribution="zipfian",
+                             n_records=2000))
+        return sim.mean_latency(kind="update", dtype="global")
+
+    assert run(4096) < run(0) * 0.95  # >=5% better with the cache
+
+
+def test_ycsb_workload_proportions():
+    wl = YCSBWorkload(seed=0, p_global=0.3)
+    ops = wl.run_ops(4000)
+    reads = sum(1 for o in ops if o.kind == "read") / len(ops)
+    globs = sum(1 for o in ops if o.dtype == "global") / len(ops)
+    assert abs(reads - 0.5) < 0.05
+    assert abs(globs - 0.3) < 0.05
+
+
+def test_ycsb_zipfian_hotset():
+    wl = YCSBWorkload(seed=0, distribution="zipfian")
+    ops = wl.run_ops(5000)
+    hot = set(wl.keys[i] for i in wl.hotset)
+    frac = sum(1 for o in ops if o.key in hot) / len(ops)
+    assert 0.75 < frac < 0.85  # 80% of ops to the 20% hotset
+
+
+def test_ycsb_latest_skews_recent():
+    wl = YCSBWorkload(seed=0, distribution="latest")
+    ops = wl.run_ops(5000)
+    idx = [int(o.key[4:]) for o in ops]
+    newest_half = sum(1 for i in idx if i >= wl.n // 2) / len(idx)
+    assert newest_half > 0.7

@@ -1,0 +1,50 @@
+"""End-to-end training loop: loss decreases; kill-and-resume is
+bit-exact vs an uninterrupted run (preemption-safe restart)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.checkpoint import QuorumCheckpointer
+from repro.train.loop import train_loop
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_config("stablelm-3b"))
+
+
+@pytest.mark.slow
+def test_loss_decreases(cfg):
+    res = train_loop(cfg, steps=20, batch=4, seq_len=64, lr=3e-3, seed=1)
+    first = np.mean(res.losses[:4])
+    last = np.mean(res.losses[-4:])
+    assert last < first, (first, last)
+
+
+@pytest.mark.slow
+def test_preempt_resume_bit_exact(cfg, tmp_path):
+    # uninterrupted 10 steps
+    ref = train_loop(cfg, steps=10, batch=2, seq_len=32, seed=3)
+    # 5 steps, checkpoint, "crash", resume for 5 more
+    ck = QuorumCheckpointer(str(tmp_path / "ck"), n_hosts=4, replication=3)
+    a = train_loop(cfg, steps=5, batch=2, seq_len=32, seed=3, ckpt=ck,
+                   ckpt_every=100, async_ckpt=False)
+    assert ck.latest_step() == 5
+    b = train_loop(cfg, steps=10, batch=2, seq_len=32, seed=3, ckpt=ck,
+                   ckpt_every=100, async_ckpt=False)
+    assert b.restored_from == 5
+    full = a.losses + b.losses
+    np.testing.assert_allclose(full, ref.losses, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_resume_after_host_loss(cfg, tmp_path):
+    ck = QuorumCheckpointer(str(tmp_path / "ck"), n_hosts=5, replication=3)
+    train_loop(cfg, steps=3, batch=2, seq_len=32, seed=4, ckpt=ck,
+               ckpt_every=100, async_ckpt=False)
+    ck.kill_host(1)  # minority of every replica set
+    res = train_loop(cfg, steps=6, batch=2, seq_len=32, seed=4, ckpt=ck,
+                     ckpt_every=100, async_ckpt=False)
+    assert res.restored_from == 3
+    assert len(res.losses) == 3
