@@ -64,6 +64,19 @@ def bench_fig13_rate():
              f"{r['latency_ms']:.2f}")
 
 
+def bench_fig_churn():
+    """Elastic gateway churn: 10 groups / 1000 clients, static vs churn."""
+    from repro.sim.experiments import fig_churn
+    for r in fig_churn(ops_per_client=1000):
+        s = r["scenario"]
+        _row(f"fig_churn.write_latency_ms.{s}", f"{r['write_latency_ms']:.2f}")
+        _row(f"fig_churn.global_write_latency_ms.{s}",
+             f"{r['global_write_latency_ms']:.2f}")
+        _row(f"fig_churn.throughput_ops.{s}", f"{r['throughput_ops']:.0f}",
+             f"clients={r['clients']};churn_events={r['churn_events']};"
+             f"keys_moved={r['keys_moved']}")
+
+
 def bench_headline_claims():
     from repro.sim.experiments import headline_claims
     for c in headline_claims(ops_per_client=2000):
@@ -238,6 +251,7 @@ def main() -> None:
     bench_edgecache()
     bench_gateway_cache()
     bench_energy()
+    bench_fig_churn()
     bench_headline_claims()
     bench_fig5_6_locality()
     bench_fig7_8_distributions()

@@ -10,19 +10,30 @@ the original committed).
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING
+from typing import Dict, TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover
     from .kvstore import EdgeKVCluster
 
 
-def assign_backup_groups(cluster: "EdgeKVCluster") -> None:
-    """Wire every group's successor group as its backup (learner set)."""
+def desired_backup_assignments(cluster: "EdgeKVCluster") -> Dict[str, str]:
+    """The §7.3 successor rule: each group's backup is the first distinct
+    group following its gateway on the overlay. Single source of truth for
+    both initial wiring and elastic re-wiring."""
+    desired: Dict[str, str] = {}
+    if len(cluster.groups) < 2:
+        return desired
     for gid, gw_id in cluster.gateway_of_group.items():
         backup_gw = cluster.ring.successor_group(gw_id)
         backup_gid = cluster.gateways[backup_gw].group.id
-        if backup_gid == gid:  # single-group degenerate case
-            continue
+        if backup_gid != gid:  # skip the single-group degenerate self-backup
+            desired[gid] = backup_gid
+    return desired
+
+
+def assign_backup_groups(cluster: "EdgeKVCluster") -> None:
+    """Wire every group's successor group as its backup (learner set)."""
+    for gid, backup_gid in desired_backup_assignments(cluster).items():
         cluster.backup_of[gid] = backup_gid
         cluster.groups[gid].attach_learners(cluster.groups[backup_gid])
 

@@ -65,6 +65,10 @@ class ChordRing:
         self._vowners: List[str] = []       # parallel owner ids
         self.nodes: Dict[str, List[int]] = {}  # physical id -> its vhashes
         self._fingers: Dict[int, List[FingerEntry]] = {}
+        # churn instrumentation: tests assert add/remove never trigger a
+        # from-scratch rebuild once the incremental path is in place
+        self.finger_rebuilds = 0
+        self.incremental_updates = 0
 
     # ------------------------------------------------------------- topology
     def add_node(self, node_id: str, weight: float = 1.0) -> None:
@@ -84,17 +88,18 @@ class ChordRing:
             idx = bisect.bisect_left(self._vhashes, vh)
             self._vhashes.insert(idx, vh)
             self._vowners.insert(idx, node_id)
-        self._rebuild_fingers()
+        self._fingers_after_add(vhashes)
 
     def remove_node(self, node_id: str) -> None:
         if node_id not in self.nodes:
             raise KeyError(node_id)
-        for vh in self.nodes.pop(node_id):
+        removed = self.nodes.pop(node_id)
+        for vh in removed:
             idx = bisect.bisect_left(self._vhashes, vh)
             del self._vhashes[idx]
             del self._vowners[idx]
         self.weights.pop(node_id, None)
-        self._rebuild_fingers()
+        self._fingers_after_remove(removed)
 
     # -------------------------------------------------------------- lookup
     def successor(self, point: int) -> str:
@@ -117,15 +122,58 @@ class ChordRing:
     # model per-hop latency in the simulator. Data-plane callers use
     # ``locate`` directly (one control-plane computation).
     def _rebuild_fingers(self) -> None:
+        self.finger_rebuilds += 1
         self._fingers.clear()
         if not self._vhashes:
             return
         for vh in self._vhashes:
-            entries = []
-            for i in range(BITS):
-                start = (vh + (1 << i)) % RING_SIZE
-                entries.append(FingerEntry(start, self._succ_vhash(start)))
-            self._fingers[vh] = entries
+            self._fingers[vh] = self._fresh_table(vh)
+
+    def _fresh_table(self, vh: int) -> List[FingerEntry]:
+        entries = []
+        for i in range(BITS):
+            start = (vh + (1 << i)) % RING_SIZE
+            entries.append(FingerEntry(start, self._succ_vhash(start)))
+        return entries
+
+    # Incremental maintenance (Chord §4 join/leave, batched per physical
+    # node). A membership event touches O(V·BITS) finger entries instead of
+    # recomputing all V·BITS entries with a bisect each — the from-scratch
+    # rebuild is kept only as the test oracle.
+    def _fingers_after_add(self, new_vhashes: List[int]) -> None:
+        self.incremental_updates += 1
+        # 1. the new vnodes need full tables (the sorted ring lists already
+        #    contain them, so _succ_vhash sees the final membership)
+        for vh in new_vhashes:
+            self._fingers[vh] = self._fresh_table(vh)
+        # 2. an existing finger [start -> node] is redirected iff one of the
+        #    new vnodes lies in [start, node) — i.e. it is now the closer
+        #    successor of start. Clockwise distances make the wrap explicit.
+        new_sorted = sorted(new_vhashes)
+        new_set = set(new_vhashes)
+        n_new = len(new_sorted)
+        for vh, entries in self._fingers.items():
+            if vh in new_set:
+                continue  # freshly built above
+            for e in entries:
+                i = bisect.bisect_left(new_sorted, e.start)
+                cand = new_sorted[i % n_new]  # first new vnode clockwise
+                if (cand - e.start) % RING_SIZE < (e.node - e.start) % RING_SIZE:
+                    e.node = cand
+
+    def _fingers_after_remove(self, removed_vhashes: List[int]) -> None:
+        self.incremental_updates += 1
+        for vh in removed_vhashes:
+            self._fingers.pop(vh, None)
+        if not self._vhashes:
+            self._fingers.clear()
+            return
+        # only entries that pointed at a departed vnode need re-resolving
+        removed = set(removed_vhashes)
+        for entries in self._fingers.values():
+            for e in entries:
+                if e.node in removed:
+                    e.node = self._succ_vhash(e.start)
 
     def _succ_vhash(self, point: int) -> int:
         idx = bisect.bisect_left(self._vhashes, point % RING_SIZE)
@@ -134,11 +182,12 @@ class ChordRing:
         return self._vhashes[idx]
 
     def _closest_preceding(self, from_vh: int, target: int) -> int:
+        # Uses the precomputed FingerEntry.node (kept fresh by incremental
+        # maintenance) — no per-finger bisect on the hot routing path.
         fingers = self._fingers[from_vh]
         for entry in reversed(fingers):
-            f_vh = self._succ_vhash(entry.start)
-            if _in_open_interval(f_vh, from_vh, target):
-                return f_vh
+            if _in_open_interval(entry.node, from_vh, target):
+                return entry.node
         return from_vh
 
     def route(self, start_node: str, key: str) -> List[str]:

@@ -66,6 +66,12 @@ class EdgeGroup:
         self.node_ids = list(node_ids)
         self.storage: Dict[str, StorageModule] = {
             nid: StorageModule() for nid in node_ids}
+        # §7.3 mirrors of OTHER groups this group backs up, keyed by the
+        # primary's id — kept apart from the authoritative `storage` so a
+        # backup relationship can end (or rewire) without leaving replicated
+        # residue behind.
+        self.backup_storage: Dict[str, Dict[str, StorageModule]] = {}
+        self._learner_group: Optional["EdgeGroup"] = None
         self.learner_ids: List[str] = []
         self._seed = seed
         self.raft = LocalCluster(
@@ -79,14 +85,36 @@ class EdgeGroup:
     def attach_learners(self, learner_group: "EdgeGroup") -> None:
         import random as _random
         from .raft import RaftNode, stable_seed
+        # Mid-life attachment must NOT replay the full historical log: it
+        # may contain migration tombstones (put k / delete k) for keys that
+        # have since been handed to the learner's own group, and replaying
+        # the delete would erase the live copy. InstallSnapshot semantics:
+        # fast-forward the learner past the committed prefix and seed it
+        # with the donor's *current* state instead.
+        donor = max((self.raft.nodes[nid] for nid in self.node_ids),
+                    key=lambda n: n.commit_index)
+        snapshot = self.storage[donor.id].stores if donor.commit_index else {}
+        # fresh per-primary mirror: any residue from an earlier backup
+        # relationship (e.g. keys deleted while detached) is discarded, so
+        # the put-only snapshot seed below fully defines the mirror state
+        mirror = {nid: StorageModule() for nid in learner_group.node_ids}
+        learner_group.backup_storage[self.id] = mirror
+        self._learner_group = learner_group
         for nid in learner_group.node_ids:
             lid = f"{nid}@backup-of-{self.id}"
             node = RaftNode(
                 lid, self.raft_ids() + [lid], voter=False,
-                apply_fn=learner_group.storage[nid].apply,
+                apply_fn=mirror[nid].apply,
                 rng=_random.Random(self._seed * 31 + stable_seed(lid)),
             )
             node.voter_ids = set(self.node_ids)
+            if donor.commit_index:
+                node.log = list(donor.log)
+                node.commit_index = donor.commit_index
+                node.last_applied = donor.commit_index
+                for dtype, kv in snapshot.items():
+                    for k, v in kv.items():
+                        node.apply_fn(("put", dtype, k, v))
             self.raft.nodes[lid] = node
             node.start(self.raft.now)
             self.learner_ids.append(lid)
@@ -94,6 +122,24 @@ class EdgeGroup:
         for nid in self.node_ids:
             n = self.raft.nodes[nid]
             n.peers = [p for p in self.raft.nodes if p != nid]
+
+    def detach_learners(self) -> None:
+        """Drop all non-voting learners (elastic backup re-wiring), and the
+        mirror they maintained — a no-longer-replicated copy must not
+        survive to serve stale failover reads later."""
+        for lid in self.learner_ids:
+            self.raft.nodes.pop(lid, None)
+        self.learner_ids.clear()
+        if self._learner_group is not None:
+            self._learner_group.backup_storage.pop(self.id, None)
+            self._learner_group = None
+        for nid in self.node_ids:
+            n = self.raft.nodes[nid]
+            n.peers = [p for p in self.raft.nodes if p != nid]
+            n.next_index = {p: i for p, i in n.next_index.items()
+                            if p in self.raft.nodes}
+            n.match_index = {p: i for p, i in n.match_index.items()
+                             if p in self.raft.nodes}
 
     def raft_ids(self) -> List[str]:
         return list(self.raft.nodes.keys())
@@ -130,6 +176,16 @@ class EdgeGroup:
         # serializable: any member may answer (possibly stale)
         member = self.node_ids[0]
         return OpResult(True, value=self.storage[member].get(dtype, key),
+                        quorum_size=1, leader=None)
+
+    def backup_get(self, primary_id: str, dtype: str, key: str) -> OpResult:
+        """§7.3 failover read from the mirror this group keeps for
+        ``primary_id`` — serializable (possibly stale), reads only."""
+        mirror = self.backup_storage.get(primary_id)
+        if mirror is None:
+            return OpResult(False)
+        member = self.node_ids[0]
+        return OpResult(True, value=mirror[member].get(dtype, key),
                         quorum_size=1, leader=None)
 
     # -- fault injection used by tests
@@ -189,19 +245,152 @@ class EdgeKVCluster:
         self.groups: Dict[str, EdgeGroup] = {}
         self.gateways: Dict[str, GatewayNode] = {}
         self.gateway_of_group: Dict[str, str] = {}
-        for gi, size in enumerate(group_sizes):
-            gid = f"g{gi}"
-            nodes = [f"{gid}-st{j}" for j in range(size)]
-            self.groups[gid] = EdgeGroup(gid, nodes, seed=seed + gi)
-            gw_id = f"gw{gi}"
-            self.ring.add_node(gw_id)
-            self.gateways[gw_id] = GatewayNode(
-                gw_id, self.groups[gid], self.ring, cache_size=gateway_cache)
-            self.gateway_of_group[gid] = gw_id
+        self._seed = seed
+        self._gateway_cache = gateway_cache
+        self._backup_groups = backup_groups
+        self._next_gi = 0
+        self.migrations: List[Tuple[str, str, int]] = []  # (event, gid, keys)
+        for size in group_sizes:
+            self._spawn_group(size, weight=1.0)
         self.backup_of: Dict[str, str] = {}
         if backup_groups and len(group_sizes) >= 2:
             from .backup import assign_backup_groups
             assign_backup_groups(self)
+
+    def _spawn_group(self, size: int, *, weight: float) -> Tuple[str, str]:
+        gi = self._next_gi
+        self._next_gi += 1
+        gid, gw_id = f"g{gi}", f"gw{gi}"
+        nodes = [f"{gid}-st{j}" for j in range(size)]
+        self.groups[gid] = EdgeGroup(gid, nodes, seed=self._seed + gi)
+        self.ring.add_node(gw_id, weight=weight)
+        self.gateways[gw_id] = GatewayNode(
+            gw_id, self.groups[gid], self.ring,
+            cache_size=self._gateway_cache)
+        self.gateway_of_group[gid] = gw_id
+        return gid, gw_id
+
+    # -------------------------------------------------- elastic membership
+    def _invalidate_location_caches(self) -> None:
+        """Ring membership changed: every §7.2 location cache may now point
+        at the wrong owner — clear them (K/m keys re-learn on next lookup)."""
+        for gw in self.gateways.values():
+            if gw.location_cache is not None:
+                gw.location_cache.invalidate()
+
+    def add_group(self, size: int, *, weight: float = 1.0) -> str:
+        """Join a new edge group + gateway at runtime (elastic scale-out).
+
+        The gateway enters the Chord overlay (incremental finger update),
+        then the global keys whose successor changed are handed off: each is
+        read from its old owner with a linearizable barrier, committed into
+        the new group's Raft log, verified readable at the new owner, and
+        only then deleted at the source — so no key is ever lost, and a key
+        is double-owned only while the ring already routes to the new owner.
+        """
+        # Snapshot ownership BEFORE the ring changes. Leader stores hold
+        # only keys their group authoritatively owns (§7.3 mirrors live in
+        # backup_storage, never here); the locate() filter is defensive —
+        # it keeps the handoff correct even if that invariant ever drifts.
+        owned_before: List[Tuple[str, EdgeGroup]] = []
+        for other_gw, gw in self.gateways.items():
+            src = gw.group
+            lead = src.raft.run_until_leader()
+            src.raft.step(0.0)  # read barrier: leader state is current
+            owned_before.extend(
+                (k, src) for k in list(src.storage[lead.id].stores[GLOBAL])
+                if self.ring.locate(k) == other_gw)
+        gid, gw_id = self._spawn_group(size, weight=weight)
+        self._invalidate_location_caches()
+        moved = 0
+        dest = self.groups[gid]
+        for key, src in owned_before:
+            if self.ring.locate(key) == gw_id:
+                moved += self._migrate_key(src, dest, key)
+        self._rewire_backups()
+        self.migrations.append(("add", gid, moved))
+        return gid
+
+    def remove_group(self, gid: str) -> int:
+        """Drain a group and leave the ring (elastic scale-in).
+
+        Global keys the group owned are re-homed to their new successor
+        groups through those groups' Raft logs *after* the gateway has left
+        the overlay, so lookups during the (synchronous) drain already route
+        to the surviving owners. Local data is group-scoped by definition
+        (§3.2.5) and leaves with the group. Returns the number of keys
+        migrated.
+        """
+        if gid not in self.groups:
+            raise KeyError(gid)
+        if len(self.groups) < 2:
+            raise RuntimeError("cannot remove the last group")
+        gw_id = self.gateway_of_group[gid]
+        src = self.groups[gid]
+        # End the draining group's backup relationship BEFORE the handoff:
+        # the group is leaving, so its mirror must not outlive it, and the
+        # handoff's src.delete traffic has no business replicating to a
+        # backup that will be rewired by _rewire_backups below anyway.
+        src.detach_learners()
+        self.backup_of.pop(gid, None)
+        lead = src.raft.run_until_leader()
+        src.raft.step(0.0)  # read barrier before snapshotting ownership
+        # defensive ownership filter (see add_group): the leader store holds
+        # only keys this gateway owns; mirrors live in backup_storage
+        owned = [k for k in src.storage[lead.id].stores[GLOBAL]
+                 if self.ring.locate(k) == gw_id]
+        self.ring.remove_node(gw_id)
+        self._invalidate_location_caches()
+        moved = 0
+        for key in owned:
+            dest = self.gateways[self.ring.locate(key)].group
+            moved += self._migrate_key(src, dest, key)
+        del self.groups[gid]
+        del self.gateways[gw_id]
+        del self.gateway_of_group[gid]
+        self.backup_of = {g: b for g, b in self.backup_of.items()
+                          if g != gid and b != gid}
+        self._rewire_backups()
+        self.migrations.append(("remove", gid, moved))
+        return moved
+
+    def _rewire_backups(self) -> None:
+        """Re-apply the §7.3 successor rule after a membership change.
+
+        Groups whose successor changed drop their learners and attach the
+        new backup's nodes; a freshly attached learner is snapshot-seeded
+        with the donor's current state (see attach_learners) — never
+        backfilled from the historical log, which may contain migration
+        tombstones for keys the learner's group now owns.
+        """
+        if not self._backup_groups:
+            return
+        from .backup import desired_backup_assignments
+        desired = desired_backup_assignments(self)
+        for gid, group in self.groups.items():
+            want = desired.get(gid)
+            if self.backup_of.get(gid) == want and not (
+                    want is None and group.learner_ids):
+                continue
+            group.detach_learners()
+            if want is None:
+                self.backup_of.pop(gid, None)
+            else:
+                group.attach_learners(self.groups[want])
+                self.backup_of[gid] = want
+
+    def _migrate_key(self, src: EdgeGroup, dest: EdgeGroup, key: str) -> int:
+        """Move one global key src -> dest through dest's Raft log."""
+        val = src.get(GLOBAL, key, linearizable=True).value
+        dest.put(GLOBAL, key, val)
+        # linearizable read barrier at the new owner before dropping the
+        # source copy: the handoff is complete only once a quorum at dest
+        # serves the key.
+        check = dest.get(GLOBAL, key, linearizable=True)
+        if not check.ok or check.value != val:  # pragma: no cover - safety
+            raise RuntimeError(f"handoff verification failed for {key!r}")
+        src.delete(GLOBAL, key)
+        return 1
 
     # ----------------------------------------------------- client interface
     def _owner_group(self, key: str, via_gateway: str) -> Tuple[EdgeGroup, List[str]]:

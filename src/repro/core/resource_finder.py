@@ -41,9 +41,10 @@ def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
         backup_gid = cluster.backup_of.get(group.id)
         if backup_gid is None:
             return OpResult(False)
-        # §7.3: backup serves READS ONLY, possibly stale -> serializable.
+        # §7.3: backup serves READS ONLY, possibly stale -> serializable,
+        # answered from the mirror it maintains for the owner group.
         backup = cluster.groups[backup_gid]
-        res = backup.get(GLOBAL, key, linearizable=False)
+        res = backup.backup_get(group.id, GLOBAL, key)
         res.from_backup = True  # type: ignore[attr-defined]
         res.dht_path = path  # type: ignore[attr-defined]
         return res

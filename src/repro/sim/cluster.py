@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Optional, Tuple
 
 from repro.core.hashring import ChordRing
 from repro.core.kvstore import StorageModule, LOCAL, GLOBAL
@@ -87,21 +87,17 @@ class SimEdgeKV:
         self.groups: Dict[str, dict] = {}
         self.gateway_of_group: Dict[str, str] = {}
         self.group_of_gateway: Dict[str, str] = {}
-        from repro.core.cache import LRUCache
-        for gi, n in enumerate(group_sizes):
-            gid, gw = f"g{gi}", f"gw{gi}"
-            self.groups[gid] = {
-                "n": n,
-                "leader": Resource(self.env, capacity=1),
-                "state": StorageModule(),
-                "page_cache": LRUCache(max(1, self.service.page_cache_keys)),
-            }
-            self.ring.add_node(gw)
-            self.gateway_of_group[gid] = gw
-            self.group_of_gateway[gw] = gid
+        self._gateway_cache = gateway_cache
+        self._next_gi = 0
+        for n in group_sizes:
+            self._spawn_group(n)
         self.records: List[OpRecord] = []
         self.client_spans: Dict[str, List[float]] = {}
         self.client_ops: Dict[str, int] = {}
+        self.client_groups: set = set()  # groups hosting load generators
+        # churn log: (virtual time, "add"|"remove", gid, keys moved)
+        self.churn_events: List[Tuple[float, str, str, int]] = []
+        self.churn_epoch = 0  # bumped on every membership event
         # §7.2 gateway location cache (beyond-paper evaluation: the paper
         # proposes it as future work; we measure it)
         self.gw_cache: Dict[str, Any] = {}
@@ -109,6 +105,112 @@ class SimEdgeKV:
             from repro.core.cache import LRUCache
             self.gw_cache = {gw: LRUCache(gateway_cache)
                              for gw in self.group_of_gateway}
+
+    def _spawn_group(self, n: int) -> Tuple[str, str]:
+        from repro.core.cache import LRUCache
+        gi = self._next_gi
+        self._next_gi += 1
+        gid, gw = f"g{gi}", f"gw{gi}"
+        self.groups[gid] = {
+            "n": n,
+            "leader": Resource(self.env, capacity=1),
+            "state": StorageModule(),
+            "page_cache": LRUCache(max(1, self.service.page_cache_keys)),
+            "retired": False,
+        }
+        self.ring.add_node(gw)
+        self.gateway_of_group[gid] = gw
+        self.group_of_gateway[gw] = gid
+        return gid, gw
+
+    # --------------------------------------------------------- elastic churn
+    def add_group(self, n: int = 3) -> Tuple[str, int]:
+        """Join an elastic group mid-run; returns (gid, global keys moved).
+
+        The gateway enters the ring immediately (incremental finger update);
+        global state whose successor changed is handed to the new group's
+        state machine. In-flight ops that already resolved an owner complete
+        against it — exactly the window the core-layer read barrier covers.
+        """
+        gid, gw = self._spawn_group(n)
+        if self.gw_cache:
+            from repro.core.cache import LRUCache
+            self.gw_cache[gw] = LRUCache(self._gateway_cache)
+        self._invalidate_gw_caches()
+        moved = 0
+        dest = self.groups[gid]["state"]
+        for other, g in self.groups.items():
+            if other == gid or g["retired"]:
+                continue
+            store = g["state"].stores[GLOBAL]
+            for key in [k for k in store if self.ring.locate(k) == gw]:
+                dest.apply(("put", GLOBAL, key, store[key]))
+                g["state"].apply(("delete", GLOBAL, key, None))
+                moved += 1
+        self.churn_events.append((self.env.now, "add", gid, moved))
+        return gid, moved
+
+    def remove_group(self, gid: str) -> int:
+        """Drain an elastic group mid-run; returns global keys moved.
+
+        The group is *retired*, not deleted: its gateway leaves the ring so
+        no new op routes to it, while ops already in flight finish against
+        it for timing purposes (its global store is emptied by the drain;
+        in-flight writes re-home at apply time, see _group_write). Groups
+        hosting load-generating clients cannot be drained — their workers
+        would lose their local store.
+        """
+        g = self.groups[gid]
+        if g["retired"]:
+            raise ValueError(f"{gid} already retired")
+        if gid in self.client_groups:
+            raise ValueError(f"cannot drain {gid}: load-generating clients attached")
+        if len(self.ring) < 2:
+            raise RuntimeError("cannot remove the last group")
+        gw = self.gateway_of_group[gid]
+        self.ring.remove_node(gw)
+        g["retired"] = True
+        self.gw_cache.pop(gw, None)
+        self._invalidate_gw_caches()
+        moved = 0
+        store = g["state"].stores[GLOBAL]
+        for key in list(store):
+            owner_gid = self.group_of_gateway[self.ring.locate(key)]
+            self.groups[owner_gid]["state"].apply(
+                ("put", GLOBAL, key, store[key]))
+            moved += 1
+        store.clear()
+        self.churn_events.append((self.env.now, "remove", gid, moved))
+        return moved
+
+    def _invalidate_gw_caches(self) -> None:
+        self.churn_epoch += 1
+        for cache in self.gw_cache.values():
+            cache.invalidate()
+
+    def handoff_time(self, moved: int) -> float:
+        """Virtual-time cost of bulk key handoff: one gw-gw transfer of the
+        migrated records (the per-key Raft commit overlaps with it)."""
+        if moved <= 0:
+            return 0.0
+        return self.net.xfer("gw_gw", moved * (RECORD_BYTES + REQ_BYTES))
+
+    def churn_proc(self, *, t_start: float = 0.1, period: float = 0.2,
+                   adds: int = 2, group_size: int = 3,
+                   remove_added: bool = True) -> Generator:
+        """Gateway churn driver: join ``adds`` elastic groups one per
+        ``period``, then (optionally) drain them again — each membership
+        event pays its key-handoff transfer time before the next."""
+        yield Timeout(t_start)
+        added: List[str] = []
+        for _ in range(adds):
+            gid, moved = self.add_group(group_size)
+            added.append(gid)
+            yield Timeout(self.handoff_time(moved) + period)
+        if remove_added:
+            for gid in added:
+                moved = self.remove_group(gid)
+                yield Timeout(self.handoff_time(moved) + period)
 
     # ------------------------------------------------------------ group ops
     def _quorum_rtt(self, n: int, payload: int) -> float:
@@ -135,6 +237,15 @@ class SimEdgeKV:
         yield Timeout(self.service.commit_s + self._page_penalty(g, op.key))
         g["leader"].release()
         yield Timeout(self._quorum_rtt(g["n"], op.value_bytes + ACK_BYTES))
+        if tier == GLOBAL and self.churn_events:
+            # a churn event (join OR drain) may have re-homed the key while
+            # this op was in flight: the write follows the handoff to the
+            # key's current owner (the core layer's read-barrier/forwarding
+            # semantics), so state is never stranded at a stale owner.
+            # Gated on churn_events to keep churn-free runs off this lookup.
+            owner_gid = self.group_of_gateway[self.ring.locate(op.key)]
+            if owner_gid != gid:
+                gid, g = owner_gid, self.groups[owner_gid]
         g["state"].apply(("put", tier, op.key, ("v", op.value_bytes)))
 
     def _group_read(self, gid: str, op: Op, tier: str) -> Generator:
@@ -184,13 +295,16 @@ class SimEdgeKV:
                     yield Timeout(self.net.xfer("gw_gw", req)
                                   + self.service.gw_route_s)
             else:
+                epoch = self.churn_epoch
                 path = self.ring.route(gw, op.key)
                 owner_gw = path[-1]
                 hops = len(path) - 1
                 for _ in range(hops):
                     yield Timeout(self.net.xfer("gw_gw", req)
                                   + self.service.gw_route_s)
-                if self.gw_cache:
+                # don't re-insert a location learned before a churn event:
+                # the invalidation already ran and this owner may be stale
+                if self.gw_cache and epoch == self.churn_epoch:
                     self.gw_cache[gw].put(op.key, owner_gw)
             owner_gid = self.group_of_gateway[owner_gw]
             yield Timeout(self.net.xfer("st_gw", req))  # gw -> group leader
@@ -210,16 +324,23 @@ class SimEdgeKV:
     # -------------------------------------------------------- load drivers
     def run_closed_loop(self, *, threads_per_client: int = 100,
                         ops_per_client: int = 10_000,
-                        workload_kw: Optional[dict] = None) -> None:
+                        workload_kw: Optional[dict] = None,
+                        seed_offset: int = 0) -> None:
         """One client per group, each with N closed-loop worker threads
-        sharing ``ops_per_client`` operations (the paper's YCSB setup)."""
+        sharing ``ops_per_client`` operations (the paper's YCSB setup).
+
+        ``seed_offset`` shifts every client's workload seed uniformly (same
+        offset => identical replay); the caller's ``workload_kw`` dict is
+        never mutated.
+        """
         workload_kw = dict(workload_kw or {})
-        for gi, gid in enumerate(self.groups):
-            wl = YCSBWorkload(seed=1000 + gi + workload_kw.pop("_seed", 0),
-                              **workload_kw)
-            workload_kw["_seed"] = 0  # only offset once
+        for gi, gid in enumerate(list(self.groups)):
+            if self.groups[gid]["retired"]:
+                continue
+            wl = YCSBWorkload(seed=1000 + gi + seed_offset, **workload_kw)
             per_thread = max(1, ops_per_client // threads_per_client)
             self.client_ops[gid] = per_thread * threads_per_client
+            self.client_groups.add(gid)
             for t in range(threads_per_client):
                 self.env.process(self._worker(gid, wl, per_thread))
         self.env.run()
@@ -237,8 +358,11 @@ class SimEdgeKV:
                       workload_kw: Optional[dict] = None) -> None:
         """Poisson arrivals at ``rate_per_client`` ops/s per client (Fig 13)."""
         workload_kw = dict(workload_kw or {})
-        for gi, gid in enumerate(self.groups):
+        for gi, gid in enumerate(list(self.groups)):
+            if self.groups[gid]["retired"]:
+                continue
             wl = YCSBWorkload(seed=2000 + gi, **workload_kw)
+            self.client_groups.add(gid)
             self.env.process(self._arrivals(gid, wl, rate_per_client, duration))
         self.env.run()
 

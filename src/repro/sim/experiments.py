@@ -123,6 +123,45 @@ def fig13_request_rate(rates=(100, 200, 400, 800), duration: float = 20.0,
     return rows
 
 
+# --------------------------------------------------------------- churn
+def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
+              ops_per_client: int = 2000, adds: int = 3,
+              service: Optional[ServiceParams] = None,
+              seed: int = 0) -> List[dict]:
+    """Elastic gateway churn under YCSB load (beyond-paper scenario).
+
+    ``base_groups`` groups serve ``base_groups * clients_per_group``
+    closed-loop clients at 50% global data. The *static* row is the
+    baseline; the *churn* row joins ``adds`` elastic groups mid-run and
+    drains them again — each membership event updates the Chord ring
+    incrementally and hands off the global keys whose successor changed.
+    Default scale: 10 groups x 100 threads = 1000 clients.
+    """
+    rows = []
+    for scenario in ("static", "churn"):
+        sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                        service=service, seed=seed)
+        if scenario == "churn":
+            sim.env.process(sim.churn_proc(t_start=0.05, period=0.1,
+                                           adds=adds))
+        sim.run_closed_loop(
+            threads_per_client=clients_per_group,
+            ops_per_client=ops_per_client,
+            workload_kw=dict(p_global=0.5, n_records=5000))
+        rows.append(dict(
+            scenario=scenario,
+            clients=base_groups * clients_per_group,
+            write_latency_ms=1e3 * sim.mean_latency(kind="update"),
+            read_latency_ms=1e3 * sim.mean_latency(kind="read"),
+            global_write_latency_ms=1e3 * sim.mean_latency(
+                kind="update", dtype="global"),
+            throughput_ops=sim.throughput(),
+            churn_events=len(sim.churn_events),
+            keys_moved=sum(ev[3] for ev in sim.churn_events),
+        ))
+    return rows
+
+
 # ------------------------------------------------------------- validation
 @dataclass
 class ClaimCheck:

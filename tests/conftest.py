@@ -1,0 +1,101 @@
+"""Shared test setup.
+
+Provides a deterministic fallback for ``hypothesis`` when it isn't
+installed (the container image doesn't ship it): a tiny ``@given`` shim
+that draws ``max_examples`` pseudo-random examples from a fixed seed. With
+the real hypothesis available (``pip install -r requirements-dev.txt``)
+the shim is inert and the genuine library runs with shrinking etc.
+"""
+from __future__ import annotations
+
+import random
+import string
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=2**32 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def lists(elements, *, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            if not unique:
+                return [elements.example(rng) for _ in range(n)]
+            out, seen = [], set()
+            for _ in range(50 * max(n, 1)):
+                v = elements.example(rng)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+                if len(out) == n:
+                    break
+            return out
+        return _Strategy(draw)
+
+    def text(alphabet=string.ascii_letters + string.digits, *,
+             min_size=0, max_size=10):
+        pool = list(alphabet)
+        return _Strategy(lambda rng: "".join(
+            pool[rng.randrange(len(pool))]
+            for _ in range(rng.randint(min_size, max_size))))
+
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strategies))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    def floats(min_value=0.0, max_value=1.0):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def given(*strategies):
+        def decorate(fn):
+            # Zero-arg wrapper: pytest must not mistake the injected
+            # strategy parameters for fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_stub_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rng = random.Random(0xEDBE)
+                for _ in range(n):
+                    fn(*(s.example(rng) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return decorate
+
+    def settings(*, max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def decorate(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return decorate
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.__version__ = "0.0.stub"
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name, _fn in [("integers", integers), ("sampled_from", sampled_from),
+                       ("lists", lists), ("text", text), ("tuples", tuples),
+                       ("booleans", booleans), ("floats", floats)]:
+        setattr(_st, _name, _fn)
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

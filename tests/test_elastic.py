@@ -1,0 +1,356 @@
+"""Elastic membership integration: add/remove groups under load with zero
+lost global keys, plus the simulator churn scenario."""
+import pytest
+
+from repro.core import EdgeKVCluster, LOCAL, GLOBAL
+from repro.sim import SimEdgeKV
+
+
+N_KEYS = 80
+
+
+def _load(cluster, n=N_KEYS):
+    keys = {f"glob/{i}": f"v{i}" for i in range(n)}
+    for i, (k, v) in enumerate(keys.items()):
+        cluster.put(k, v, GLOBAL, client_group=f"g{i % 3}")
+    return keys
+
+
+def _assert_all_readable(cluster, keys, *, client_group):
+    lost = {k for k, v in keys.items()
+            if cluster.get(k, GLOBAL, client_group=client_group).value != v}
+    assert not lost, f"lost {len(lost)} keys: {sorted(lost)[:5]}..."
+
+
+def _owners(cluster, keys):
+    """Which groups physically hold each key (leader state machines)."""
+    holders = {k: [] for k in keys}
+    for g in cluster.groups.values():
+        lead = g.raft.run_until_leader()
+        store = g.storage[lead.id].stores[GLOBAL]
+        for k in keys:
+            if k in store:
+                holders[k].append(g.id)
+    return holders
+
+
+def test_add_remove_group_cycle_zero_lost_keys():
+    c = EdgeKVCluster([3, 3, 3], seed=42)
+    keys = _load(c)
+
+    gid = c.add_group(3)
+    assert gid == "g3"
+    event, egid, moved = c.migrations[-1]
+    assert (event, egid) == ("add", gid) and moved > 0
+    _assert_all_readable(c, keys, client_group="g1")
+
+    # interleave fresh writes while scaled out ("under load")
+    extra = {f"late/{i}": i for i in range(20)}
+    for k, v in extra.items():
+        c.put(k, v, GLOBAL, client_group="g0")
+    keys.update(extra)
+    _assert_all_readable(c, keys, client_group=gid)
+
+    moved_back = c.remove_group(gid)
+    assert moved_back > 0
+    assert gid not in c.groups and "gw3" not in c.gateways
+    _assert_all_readable(c, keys, client_group="g2")
+
+    # exactly-once ownership: every key held by exactly its ring owner
+    holders = _owners(c, keys)
+    for k, hs in holders.items():
+        assert hs == [c.gateways[c.ring.locate(k)].group.id], (k, hs)
+
+
+def test_handoff_matches_consistent_hashing_prediction():
+    from repro.core.hashring import ChordRing
+
+    c = EdgeKVCluster([3, 3, 3, 3], seed=0)
+    keys = _load(c)
+    after = ChordRing()
+    for i in range(5):  # gateway ids fully determine the ring
+        after.add_node(f"gw{i}")
+    predicted = c.ring.moved_keys(list(keys), after)
+    c.add_group(3)
+    assert c.migrations[-1][2] == predicted
+
+
+def test_remove_original_group_rehomes_keys():
+    c = EdgeKVCluster([3, 3, 3], seed=7)
+    keys = _load(c)
+    moved = c.remove_group("g1")
+    assert moved >= 0 and "g1" not in c.groups
+    _assert_all_readable(c, keys, client_group="g0")
+
+
+def test_remove_last_group_refused():
+    c = EdgeKVCluster([3], seed=0)
+    with pytest.raises(RuntimeError):
+        c.remove_group("g0")
+
+
+def test_local_data_unaffected_by_churn():
+    c = EdgeKVCluster([3, 3], seed=1)
+    c.put("mine", "private", LOCAL, client_group="g0")
+    gid = c.add_group(3)
+    c.remove_group(gid)
+    assert c.get("mine", LOCAL, client_group="g0").value == "private"
+    assert c.get("mine", LOCAL, client_group="g1").value is None
+
+
+def test_gateway_location_caches_invalidated_on_churn():
+    c = EdgeKVCluster([3, 3, 3], seed=3, gateway_cache=64)
+    keys = _load(c, 40)
+    for k in keys:
+        c.get(k, GLOBAL, client_group="g0")  # warm gw0's location cache
+    gid = c.add_group(3)
+    # every cached location was dropped; lookups re-learn and stay correct
+    _assert_all_readable(c, keys, client_group="g0")
+    c.remove_group(gid)
+    _assert_all_readable(c, keys, client_group="g0")
+
+
+def test_backup_groups_rewired_on_churn():
+    """§7.3 wiring follows elastic membership: the successor rule is
+    re-applied after every join/drain, orphaned learners are detached, and
+    a failover read still works after the churned assignment."""
+    from repro.core.backup import backup_lag
+
+    c = EdgeKVCluster([3, 3, 3], seed=11, backup_groups=True)
+    keys = _load(c, 30)
+
+    gid = c.add_group(3)
+    # every live group has a backup, and it is its current ring successor
+    assert set(c.backup_of) == set(c.groups)
+    for g, b in c.backup_of.items():
+        succ_gw = c.ring.successor_group(c.gateway_of_group[g])
+        assert c.gateways[succ_gw].group.id == b
+        # learner wiring matches the assignment (no orphaned learners)
+        assert all(lid.endswith(f"@backup-of-{g}")
+                   for lid in c.groups[g].learner_ids)
+
+    c.remove_group(gid)
+    assert gid not in c.backup_of.values()
+    assert set(c.backup_of) == set(c.groups)
+
+    # freshly attached learners catch up via AppendEntries backfill,
+    # and the §7.3 failover path still serves reads
+    key = "glob/0"
+    owner_gid = c.gateways[c.ring.locate(key)].group.id
+    for _ in range(30):
+        c.groups[owner_gid].raft.step()
+    assert backup_lag(c, owner_gid) == 0
+    c.groups[owner_gid].crash_majority()
+    r = c.get(key, GLOBAL, client_group="g0")
+    assert r.ok and r.value == keys[key]
+    assert getattr(r, "from_backup", False)
+
+
+def test_drain_backup_group_does_not_rollback_owner():
+    """Regression: a leader store also holds learner copies of the keys of
+    the group it backs up (§7.3) — draining it must NOT re-home those
+    (possibly lagged) copies over the live owner's acknowledged writes."""
+    c = EdgeKVCluster([3, 3, 3], seed=11, backup_groups=True)
+    c.put("k", "v1", GLOBAL, client_group="g0")
+    owner = c.gateways[c.ring.locate("k")].group.id
+    backup = c.backup_of[owner]
+    for _ in range(10):  # let the learner copy of v1 land at the backup
+        c.groups[owner].raft.step()
+    c.put("k", "v2", GLOBAL, client_group="g0")
+    # drain the backup while its learner copy still lags at v1
+    c.remove_group(backup)
+    survivor = next(iter(c.groups))
+    r = c.get("k", GLOBAL, client_group=survivor)
+    assert r.ok and r.value == "v2"
+
+
+def test_add_group_with_backups_no_double_migration():
+    """Regression: the join handoff must consider each key once (at its
+    authoritative owner), not once per store holding a learner copy."""
+    from repro.core.hashring import ChordRing
+
+    c = EdgeKVCluster([3, 3, 3], seed=2, backup_groups=True)
+    keys = _load(c, 40)
+    for g in c.groups.values():
+        for _ in range(10):  # replicate learner copies everywhere
+            g.raft.step()
+    after = ChordRing()
+    for i in range(4):
+        after.add_node(f"gw{i}")
+    predicted = c.ring.moved_keys(list(keys), after)
+    c.add_group(3)
+    assert c.migrations[-1][2] == predicted
+    _assert_all_readable(c, keys, client_group="g0")
+
+
+def test_drain_group_whose_backup_is_destination():
+    """Regression: draining a group whose learners mirror into the backup
+    group must not let the handoff's src.delete erase the key just
+    migrated into that same backup group."""
+    c = EdgeKVCluster([3, 3, 3], seed=0, backup_groups=True)
+    keys = _load(c, 150)
+    c.remove_group("g1")
+    _assert_all_readable(c, keys, client_group="g0")
+    # and the keys physically live at their owners' voters
+    for k in list(keys)[:30]:
+        g = c.gateways[c.ring.locate(k)].group
+        lead = g.raft.run_until_leader()
+        assert g.storage[lead.id].get(GLOBAL, k) is not None, k
+
+
+def test_learner_reattach_does_not_replay_migration_tombstones():
+    """Regression: re-wiring a backup must fast-forward the new learners
+    (snapshot), not replay the donor's historical log — which contains
+    put/delete pairs for keys the learner's group now owns."""
+    c = EdgeKVCluster([3] * 6, seed=0, virtual_nodes=2, backup_groups=True)
+    keys = _load(c, 150)
+    c.add_group(3)
+    c.add_group(3)
+    # drive heartbeats so any (erroneous) backfill would reach learners
+    for g in c.groups.values():
+        for _ in range(25):
+            g.raft.step()
+    _assert_all_readable(c, keys, client_group="g0")
+    for k in keys:
+        g = c.gateways[c.ring.locate(k)].group
+        lead = g.raft.run_until_leader()
+        assert g.storage[lead.id].get(GLOBAL, k) is not None, k
+
+
+def test_no_stale_failover_reads_after_backup_rewire_cycle():
+    """Regression: a key deleted while its owner's backup assignment was
+    temporarily rewired must NOT resurrect on a §7.3 failover read once
+    the assignment reverts — detaching drops the mirror, re-attaching
+    snapshot-seeds a fresh one."""
+    c = EdgeKVCluster([3, 3, 3, 3], seed=0, backup_groups=True)
+    before = dict(c.backup_of)
+    keys = {f"r/{i}": i for i in range(60)}
+    for k, v in keys.items():
+        c.put(k, v, GLOBAL, client_group="g0")
+    for g in c.groups.values():
+        for _ in range(15):
+            g.raft.step()  # mirrors fully replicated
+
+    gid = c.add_group(3)
+    flipped = [g for g in before
+               if g in c.backup_of and c.backup_of[g] != before[g]]
+    assert flipped, "join should rewire at least one backup assignment"
+    X = flipped[0]
+    xgw = c.gateway_of_group[X]
+    xkeys = [k for k in keys if c.ring.locate(k) == xgw]
+    assert len(xkeys) >= 2
+    victim, survivor_key = xkeys[0], xkeys[1]
+    c.delete(victim, GLOBAL, client_group="g0")  # old backup never sees this
+
+    c.remove_group(gid)
+    assert c.backup_of[X] == before[X]  # assignment reverted
+    for _ in range(15):
+        c.groups[X].raft.step()
+    c.groups[X].crash_majority()
+
+    client = next(g for g in c.groups if g != X)
+    r = c.get(victim, GLOBAL, client_group=client)
+    assert r.value is None, "deleted key resurrected from stale mirror"
+    r2 = c.get(survivor_key, GLOBAL, client_group=client)
+    assert r2.ok and r2.value == keys[survivor_key]
+    assert getattr(r2, "from_backup", False)
+
+
+# ----------------------------------------------------------- simulator side
+def test_sim_churn_under_load():
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 10,
+                    gateway_cache=128)
+    sim.env.process(sim.churn_proc(t_start=0.05, period=0.1, adds=2))
+    sim.run_closed_loop(threads_per_client=100, ops_per_client=300,
+                        workload_kw=dict(p_global=0.5, n_records=2000))
+    assert len(sim.records) == 10 * 300
+    kinds = [ev[1] for ev in sim.churn_events]
+    assert kinds == ["add", "add", "remove", "remove"]
+    # elastic groups are retired, base groups are not
+    assert sim.groups["g10"]["retired"] and sim.groups["g11"]["retired"]
+    assert not sim.groups["g0"]["retired"]
+    # retired groups hold no global state after the drain
+    from repro.core.kvstore import GLOBAL as G
+    assert not sim.groups["g10"]["state"].stores[G]
+    assert sim.throughput() > 0
+
+
+def test_sim_no_stranded_global_state_after_churn():
+    """Regression: a global write in flight across a join/drain follows the
+    handoff — after churn settles, every global key lives only at its
+    authoritative ring owner (no stranded or double-owned state)."""
+    from repro.core.kvstore import GLOBAL as G
+
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 10)
+    sim.env.process(sim.churn_proc(t_start=0.01, period=0.05, adds=3))
+    sim.run_closed_loop(threads_per_client=100, ops_per_client=300,
+                        workload_kw=dict(p_global=0.5, n_records=1000))
+    assert len(sim.churn_events) == 6
+    for gid, g in sim.groups.items():
+        for key in g["state"].stores[G]:
+            owner = sim.group_of_gateway[sim.ring.locate(key)]
+            assert owner == gid, (gid, key, owner)
+
+
+def test_sim_gw_cache_not_repopulated_with_stale_owner():
+    """Regression: an op that routed before a churn event must not
+    re-insert its (now possibly stale) owner into the location cache
+    after the churn invalidation ran."""
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 8,
+                    gateway_cache=4096)
+    sim.env.process(sim.churn_proc(t_start=0.01, period=0.05, adds=2))
+    sim.run_closed_loop(threads_per_client=50, ops_per_client=400,
+                        workload_kw=dict(p_global=0.7, n_records=500))
+    # after the run every cached location must match the final ring
+    for gw, cache in sim.gw_cache.items():
+        for key, owner in cache._d.items():
+            assert owner == sim.ring.locate(key), (gw, key, owner)
+
+
+def test_sim_remove_group_with_clients_refused():
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3, 3, 3))
+    sim.run_closed_loop(threads_per_client=5, ops_per_client=20,
+                        workload_kw=dict(p_global=0.0))
+    with pytest.raises(ValueError):
+        sim.remove_group("g0")
+
+
+def test_sim_remove_last_group_refused():
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,))
+    with pytest.raises(RuntimeError):
+        sim.remove_group("g0")
+
+
+def test_sim_remove_group_with_open_loop_clients_refused():
+    sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3, 3, 3))
+    sim.run_open_loop(rate_per_client=200, duration=0.5,
+                      workload_kw=dict(p_global=0.5))
+    with pytest.raises(ValueError):
+        sim.remove_group("g1")
+
+
+def test_sim_churn_deterministic():
+    def run():
+        sim = SimEdgeKV(setting="edge", seed=3, group_sizes=(3,) * 4)
+        sim.env.process(sim.churn_proc(t_start=0.05, period=0.1, adds=1))
+        sim.run_closed_loop(threads_per_client=20, ops_per_client=200,
+                            workload_kw=dict(p_global=0.5))
+        return sim
+
+    a, b = run(), run()
+    assert [r.latency for r in a.records] == [r.latency for r in b.records]
+    assert a.churn_events == b.churn_events
+
+
+@pytest.mark.slow
+def test_fig_churn_experiment():
+    from repro.sim.experiments import fig_churn
+    rows = fig_churn(ops_per_client=500)
+    by = {r["scenario"]: r for r in rows}
+    assert by["static"]["churn_events"] == 0
+    assert by["churn"]["churn_events"] == 6
+    assert by["churn"]["keys_moved"] > 0
+    assert by["churn"]["clients"] == 1000
+    for r in rows:
+        assert r["throughput_ops"] > 0
+        assert r["write_latency_ms"] > 0

@@ -21,6 +21,29 @@ def test_deterministic_replay():
     assert [r.latency for r in a.records] == [r.latency for r in b.records]
 
 
+def test_seed_offset_deterministic_and_uniform():
+    """Same seed_offset => identical trace; the offset shifts EVERY
+    client's workload (regression: it used to apply to group 0 only) and
+    never mutates the caller's workload kwargs."""
+    def run(off):
+        kw = dict(p_global=0.5)
+        sim = SimEdgeKV(setting="edge", seed=1)
+        sim.run_closed_loop(threads_per_client=10, ops_per_client=200,
+                            workload_kw=kw, seed_offset=off)
+        assert kw == dict(p_global=0.5)  # caller dict untouched
+        return sim
+
+    a, b, c = run(4), run(4), run(0)
+    assert [r.latency for r in a.records] == [r.latency for r in b.records]
+    assert [r.latency for r in a.records] != [r.latency for r in c.records]
+    # uniform application: every group's op mix differs from offset 0, not
+    # just g0's (each group's workload seed shifted by the same offset)
+    for gid in ("g0", "g1", "g2"):
+        a_kinds = [r.kind for r in a.records if r.group == gid]
+        c_kinds = [r.kind for r in c.records if r.group == gid]
+        assert a_kinds != c_kinds, gid
+
+
 def test_edge_beats_cloud_locally():
     e = small("edge", 0.0)
     c = small("cloud", 0.0)
