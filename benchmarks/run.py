@@ -18,6 +18,14 @@ def _row(name, value, derived=""):
     print(f"{name},{value},{derived}", flush=True)
 
 
+def _timed(name, fn):
+    """Run one bench fn and emit a walltime_s row for it, so BENCH_*.json
+    tracks the wall-clock trajectory of every fig runner."""
+    t0 = time.perf_counter()
+    fn()
+    _row(f"walltime_s.{name}", f"{time.perf_counter() - t0:.2f}")
+
+
 # ------------------------------------------------------ paper figures 5-13
 def bench_fig5_6_locality():
     from repro.sim.experiments import fig5_6_locality
@@ -77,9 +85,44 @@ def bench_fig_churn():
              f"keys_moved={r['keys_moved']}")
 
 
+def bench_fig_scale():
+    """100 groups x 100 threads = 10k clients — unlocked by the vectorized
+    engine (fig-scale emulation in benchmark-tractable wall clock)."""
+    from repro.sim.experiments import fig_scale
+    for r in fig_scale(ops_per_client=1000):
+        d = (f"groups={r['groups']};clients={r['clients']};ops={r['ops']};"
+             f"mean_hops={r['mean_hops']:.2f}")
+        _row("fig_scale.write_latency_ms", f"{r['write_latency_ms']:.2f}", d)
+        _row("fig_scale.global_write_latency_ms",
+             f"{r['global_write_latency_ms']:.2f}")
+        _row("fig_scale.throughput_ops", f"{r['throughput_ops']:.0f}")
+        _row("fig_scale.walltime_s", f"{r['walltime_s']:.2f}")
+
+
+def bench_engine_speedup():
+    """Wall-clock speedup of the vectorized engine over the generator
+    oracle at fig_churn scale (10 groups / 1000 clients / 2000 ops)."""
+    from repro.sim.cluster import SimEdgeKV
+
+    def run(engine):
+        sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 10,
+                        engine=engine)
+        t0 = time.perf_counter()
+        sim.run_closed_loop(threads_per_client=100, ops_per_client=2000,
+                            workload_kw=dict(p_global=0.5, n_records=5000))
+        return time.perf_counter() - t0
+
+    t_fast = min(run("fast") for _ in range(2))
+    t_oracle = run("oracle")
+    _row("sim.engine_speedup", f"{t_oracle / t_fast:.1f}",
+         f"oracle_s={t_oracle:.2f};fast_s={t_fast:.2f};20k ops")
+
+
 def bench_headline_claims():
+    # full claim config (3000 ops/client, same as the tests): the fast
+    # engine makes the complete run cost well under a second
     from repro.sim.experiments import headline_claims
-    for c in headline_claims(ops_per_client=2000):
+    for c in headline_claims(ops_per_client=3000):
         _row(f"claims.{c.name.replace(' ', '_').replace(',', '')}",
              f"{c.ours:.2f}", f"paper={c.paper};ok={c.ok}")
 
@@ -251,13 +294,15 @@ def main() -> None:
     bench_edgecache()
     bench_gateway_cache()
     bench_energy()
-    bench_fig_churn()
-    bench_headline_claims()
-    bench_fig5_6_locality()
-    bench_fig7_8_distributions()
-    bench_fig9_10_clients_local()
-    bench_fig11_12_clients_global()
-    bench_fig13_rate()
+    bench_engine_speedup()
+    _timed("fig_churn", bench_fig_churn)
+    _timed("fig_scale", bench_fig_scale)
+    _timed("headline_claims", bench_headline_claims)
+    _timed("fig5_6", bench_fig5_6_locality)
+    _timed("fig7_8", bench_fig7_8_distributions)
+    _timed("fig9_10", bench_fig9_10_clients_local)
+    _timed("fig11_12", bench_fig11_12_clients_global)
+    _timed("fig13", bench_fig13_rate)
     bench_roofline()
 
 

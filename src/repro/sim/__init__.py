@@ -1,12 +1,19 @@
 """Discrete-event emulation of the paper's testbed (Grid'5000 + Distem +
-YCSB), in virtual time, driving the real EdgeKV protocol objects."""
-from .events import Environment, Resource, Timeout
+YCSB), in virtual time, driving the real EdgeKV protocol objects.
+
+Two interchangeable engines: the generator oracle (``engine="oracle"``)
+and the vectorized fast path (``engine="fast"`` /
+:class:`FastSimEdgeKV`, see :mod:`repro.sim.vectorized`)."""
+from .events import DeferredEnvironment, Environment, Resource, Timeout
 from .network import EDGE_SETTING, CLOUD_SETTING, SETTINGS, NetworkModel, Link
-from .ycsb import YCSBWorkload, Op
+from .records import OpRecord, RecordArray
+from .ycsb import YCSBWorkload, Op, KINDS, DTYPES
 from .cluster import SimEdgeKV, ServiceParams
+from .vectorized import FastSimEdgeKV
 
 __all__ = [
-    "Environment", "Resource", "Timeout", "EDGE_SETTING", "CLOUD_SETTING",
-    "SETTINGS", "NetworkModel", "Link", "YCSBWorkload", "Op", "SimEdgeKV",
-    "ServiceParams",
+    "Environment", "DeferredEnvironment", "Resource", "Timeout",
+    "EDGE_SETTING", "CLOUD_SETTING", "SETTINGS", "NetworkModel", "Link",
+    "YCSBWorkload", "Op", "KINDS", "DTYPES", "OpRecord", "RecordArray",
+    "SimEdgeKV", "FastSimEdgeKV", "ServiceParams",
 ]

@@ -20,19 +20,41 @@ Timing model of the replication manager (etcd/Raft, §5.4.1):
 
 The only free parameter the paper doesn't pin down is the leader's per-op
 service time (their disks); see DESIGN.md §2 'Calibration note'.
+
+Two execution engines drive the same timing model:
+
+* ``engine="oracle"`` (default) — one Python generator per client thread
+  stepped by the discrete-event heap in :mod:`repro.sim.events`. Simple,
+  and the semantic ground truth.
+* ``engine="fast"`` — the vectorized backend in
+  :mod:`repro.sim.vectorized`: batched numpy op schedules and delay
+  columns, with only the true serialization points (leader commit stage,
+  page-cache sequence) resolved by a per-group scan. Reproduces the oracle
+  trace bit-for-bit on closed-loop runs without churn, and statistically
+  on open-loop/churn runs.
+
+Both engines draw their closed-loop op schedules from
+:meth:`YCSBWorkload.batch_ops` with one numpy stream per client thread, so
+the op sequence is a pure function of the seeds — independent of event
+interleaving.
 """
 from __future__ import annotations
 
 import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, Generator, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.hashring import ChordRing
 from repro.core.kvstore import StorageModule, LOCAL, GLOBAL
 
-from .events import Environment, Resource, Timeout
+from .events import DeferredEnvironment, Environment, Resource, Timeout
+from .records import OpRecord, RecordArray
 from .network import NetworkModel, SETTINGS
-from .ycsb import Op, YCSBWorkload, RECORD_BYTES, REQ_BYTES
+from .ycsb import (Op, YCSBWorkload, DTYPE_CODE, DTYPES, KIND_CODE, KINDS,
+                   RECORD_BYTES, REQ_BYTES)
 
 ACK_BYTES = 64
 
@@ -58,13 +80,14 @@ class ServiceParams:
 
 
 @dataclass
-class OpRecord:
-    t_start: float
-    latency: float
-    kind: str      # read | update | insert
-    dtype: str     # local | global
-    group: str
-    remote_hops: int = 0
+class ThreadPlan:
+    """One closed-loop worker thread's pre-generated op schedule."""
+    gid: str
+    wl: YCSBWorkload
+    key_idx: np.ndarray   # int64 index into wl.keys
+    kind: np.ndarray      # uint8 KIND_CODE
+    dtype: np.ndarray     # uint8 DTYPE_CODE
+    fwd: np.ndarray       # bool: contacted edge node is not the leader
 
 
 class SimEdgeKV:
@@ -77,11 +100,18 @@ class SimEdgeKV:
         seed: int = 0,
         virtual_nodes: int = 1,
         gateway_cache: int = 0,
+        engine: str = "oracle",
     ):
-        self.env = Environment()
+        if engine not in ("oracle", "fast"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
+        # the fast engine drives auxiliary processes (e.g. churn_proc)
+        # itself, so env.process must defer instead of scheduling
+        self.env = DeferredEnvironment() if engine == "fast" else Environment()
         self.net: NetworkModel = SETTINGS[setting]
         self.setting = setting
         self.service = service or ServiceParams()
+        self.seed = seed
         self.rng = random.Random(seed)
         self.ring = ChordRing(virtual_nodes=virtual_nodes)
         self.groups: Dict[str, dict] = {}
@@ -89,9 +119,9 @@ class SimEdgeKV:
         self.group_of_gateway: Dict[str, str] = {}
         self._gateway_cache = gateway_cache
         self._next_gi = 0
+        self.records = RecordArray()
         for n in group_sizes:
             self._spawn_group(n)
-        self.records: List[OpRecord] = []
         self.client_spans: Dict[str, List[float]] = {}
         self.client_ops: Dict[str, int] = {}
         self.client_groups: set = set()  # groups hosting load generators
@@ -118,6 +148,7 @@ class SimEdgeKV:
             "page_cache": LRUCache(max(1, self.service.page_cache_keys)),
             "retired": False,
         }
+        self.records.register_group(gid)
         self.ring.add_node(gw)
         self.gateway_of_group[gid] = gw
         self.group_of_gateway[gw] = gid
@@ -271,9 +302,13 @@ class SimEdgeKV:
 
         if op.dtype == LOCAL:
             # contacted edge node forwards to the group leader unless it IS
-            # the leader (Algorithm 1 line 6): probability (n-1)/n.
-            n = self.groups[client_gid]["n"]
-            fwd = self.rng.random() < (n - 1) / n
+            # the leader (Algorithm 1 line 6): probability (n-1)/n. Batched
+            # schedules pre-draw the coin (op.fwd) per thread stream.
+            if op.fwd is not None:
+                fwd = op.fwd
+            else:
+                n = self.groups[client_gid]["n"]
+                fwd = self.rng.random() < (n - 1) / n
             if fwd:
                 yield Timeout(self.net.xfer("st_st", req))
             if is_write:
@@ -318,10 +353,42 @@ class SimEdgeKV:
             yield Timeout(self.net.xfer("st_gw", resp))  # gw -> edge node
 
         yield Timeout(self.net.xfer("cli_st", resp))
-        self.records.append(OpRecord(t0, self.env.now - t0, op.kind,
-                                     op.dtype, client_gid, hops))
+        self.records.append(t0, self.env.now - t0, KIND_CODE[op.kind],
+                            DTYPE_CODE[op.dtype],
+                            self.records.group_code(client_gid), hops)
 
     # -------------------------------------------------------- load drivers
+    def _closed_loop_plan(self, threads_per_client: int, ops_per_client: int,
+                          workload_kw: dict,
+                          seed_offset: int) -> List[ThreadPlan]:
+        """Pre-generate every worker thread's op schedule in bulk.
+
+        One numpy stream per group, drawn in a single ``batch_ops`` call
+        and sliced per thread — the schedule is a pure function of the
+        seeds (never of event interleaving), identical for both engines.
+        """
+        plan: List[ThreadPlan] = []
+        for gi, gid in enumerate(list(self.groups)):
+            if self.groups[gid]["retired"]:
+                continue
+            wl_seed = 1000 + gi + seed_offset
+            wl = YCSBWorkload(seed=wl_seed, **workload_kw)
+            per_thread = max(1, ops_per_client // threads_per_client)
+            self.client_ops[gid] = per_thread * threads_per_client
+            self.client_groups.add(gid)
+            fwd_p = (self.groups[gid]["n"] - 1) / self.groups[gid]["n"]
+            rng = np.random.default_rng(
+                np.random.SeedSequence([wl_seed & 0xFFFFFFFF]))
+            total = per_thread * threads_per_client
+            key_idx, kind, dtype = wl.batch_ops(total, rng)
+            fwd = ((dtype == DTYPE_CODE["local"])
+                   & (rng.random(total) < fwd_p))
+            for t in range(threads_per_client):
+                s = slice(t * per_thread, (t + 1) * per_thread)
+                plan.append(ThreadPlan(gid, wl, key_idx[s], kind[s],
+                                       dtype[s], fwd[s]))
+        return plan
+
     def run_closed_loop(self, *, threads_per_client: int = 100,
                         ops_per_client: int = 10_000,
                         workload_kw: Optional[dict] = None,
@@ -333,31 +400,34 @@ class SimEdgeKV:
         offset => identical replay); the caller's ``workload_kw`` dict is
         never mutated.
         """
-        workload_kw = dict(workload_kw or {})
-        for gi, gid in enumerate(list(self.groups)):
-            if self.groups[gid]["retired"]:
-                continue
-            wl = YCSBWorkload(seed=1000 + gi + seed_offset, **workload_kw)
-            per_thread = max(1, ops_per_client // threads_per_client)
-            self.client_ops[gid] = per_thread * threads_per_client
-            self.client_groups.add(gid)
-            for t in range(threads_per_client):
-                self.env.process(self._worker(gid, wl, per_thread))
-        self.env.run()
-        for gid in self.groups:
-            recs = [r for r in self.records if r.group == gid]
-            if recs:
-                span = max(r.t_start + r.latency for r in recs)
-                self.client_spans[gid] = [span]
+        plan = self._closed_loop_plan(threads_per_client, ops_per_client,
+                                      dict(workload_kw or {}), seed_offset)
+        if self.engine == "fast":
+            from .vectorized import run_closed_loop_fast
+            run_closed_loop_fast(self, plan)
+        else:
+            for tp in plan:
+                self.env.process(self._worker(tp))
+            self.env.run()
+        # per-group spans fall out of the SoA buffer in a single pass
+        for gid, (_, _, t_last) in self.records.group_stats().items():
+            self.client_spans[gid] = [t_last]
 
-    def _worker(self, gid: str, wl: YCSBWorkload, n_ops: int) -> Generator:
-        for _ in range(n_ops):
-            yield from self.client_op(gid, wl.next_op())
+    def _worker(self, tp: ThreadPlan) -> Generator:
+        keys, kinds, dtypes = tp.wl.keys, tp.kind, tp.dtype
+        for i in range(len(tp.key_idx)):
+            op = Op(KINDS[kinds[i]], keys[tp.key_idx[i]], DTYPES[dtypes[i]],
+                    fwd=bool(tp.fwd[i]))
+            yield from self.client_op(tp.gid, op)
 
     def run_open_loop(self, *, rate_per_client: float, duration: float,
                       workload_kw: Optional[dict] = None) -> None:
         """Poisson arrivals at ``rate_per_client`` ops/s per client (Fig 13)."""
         workload_kw = dict(workload_kw or {})
+        if self.engine == "fast":
+            from .vectorized import run_open_loop_fast
+            run_open_loop_fast(self, rate_per_client, duration, workload_kw)
+            return
         for gi, gid in enumerate(list(self.groups)):
             if self.groups[gid]["retired"]:
                 continue
@@ -366,9 +436,18 @@ class SimEdgeKV:
             self.env.process(self._arrivals(gid, wl, rate_per_client, duration))
         self.env.run()
 
+    def _arrival_seed(self, gid: str) -> int:
+        """Process-stable arrival seed: crc32(gid) mixed with the sim seed.
+
+        ``hash(gid)`` is salted per process (PYTHONHASHSEED), which broke
+        the engine's 'deterministic given seeds' contract for open-loop
+        runs."""
+        return zlib.crc32(gid.encode()) ^ ((self.seed + 1) * 0x9E3779B9
+                                           & 0xFFFFFFFF)
+
     def _arrivals(self, gid: str, wl: YCSBWorkload, rate: float,
                   duration: float) -> Generator:
-        rng = random.Random(hash(gid) & 0xFFFF)
+        rng = random.Random(self._arrival_seed(gid))
         t_end = self.env.now + duration
         while self.env.now < t_end:
             yield Timeout(rng.expovariate(rate))
@@ -377,20 +456,17 @@ class SimEdgeKV:
     # ------------------------------------------------------------- metrics
     def mean_latency(self, kind: Optional[str] = None,
                      dtype: Optional[str] = None) -> float:
-        sel = [r.latency for r in self.records
-               if (kind is None or r.kind == kind)
-               and (dtype is None or r.dtype == dtype)]
-        return sum(sel) / len(sel) if sel else float("nan")
+        return self.records.mean_latency(kind, dtype)
 
     def throughput(self) -> float:
-        """Paper metric: average of per-client throughputs (§5.4.2)."""
+        """Paper metric: average of per-client throughputs (§5.4.2).
+
+        Uses the record buffer's cached single-pass per-group aggregates
+        instead of rescanning all records once per group.
+        """
         per_client = []
-        for gid in self.groups:
-            recs = [r for r in self.records if r.group == gid]
-            if not recs:
-                continue
-            span = max(r.t_start + r.latency for r in recs) - min(
-                r.t_start for r in recs)
+        for gid, (count, t_first, t_last) in self.records.group_stats().items():
+            span = t_last - t_first
             if span > 0:
-                per_client.append(len(recs) / span)
+                per_client.append(count / span)
         return sum(per_client) / len(per_client) if per_client else 0.0

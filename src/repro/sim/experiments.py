@@ -3,9 +3,16 @@
 Each function returns plain dicts/lists so both the benchmark harness and
 the tests consume them. Virtual-time simulation: results are deterministic
 for a given seed.
+
+All runners execute on the vectorized engine by default
+(``engine="fast"``, :mod:`repro.sim.vectorized`); pass
+``engine="oracle"`` for the generator reference. Closed-loop no-churn
+figures are bit-identical across engines; open-loop/churn figures agree
+statistically.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -15,9 +22,9 @@ from .cluster import ServiceParams, SimEdgeKV
 def _run(setting: str, *, p_global: float, distribution: str = "uniform",
          threads: int = 100, ops_per_client: int = 3000,
          service: Optional[ServiceParams] = None, seed: int = 0,
-         group_sizes=(3, 3, 3)) -> SimEdgeKV:
+         group_sizes=(3, 3, 3), engine: str = "fast") -> SimEdgeKV:
     sim = SimEdgeKV(setting=setting, group_sizes=group_sizes,
-                    service=service, seed=seed)
+                    service=service, seed=seed, engine=engine)
     sim.run_closed_loop(
         threads_per_client=threads, ops_per_client=ops_per_client,
         workload_kw=dict(p_global=p_global, distribution=distribution))
@@ -26,13 +33,15 @@ def _run(setting: str, *, p_global: float, distribution: str = "uniform",
 
 # ------------------------------------------------------------- Fig 5 & 6
 def fig5_6_locality(ops_per_client: int = 3000,
-                    service: Optional[ServiceParams] = None) -> List[dict]:
+                    service: Optional[ServiceParams] = None,
+                    engine: str = "fast") -> List[dict]:
     """Write latency / throughput vs % of global data, edge vs cloud."""
     rows = []
     for setting in ("edge", "cloud"):
         for pct in (0, 25, 50, 75, 100):
             sim = _run(setting, p_global=pct / 100.0,
-                       ops_per_client=ops_per_client, service=service)
+                       ops_per_client=ops_per_client, service=service,
+                       engine=engine)
             rows.append(dict(
                 setting=setting, pct_global=pct,
                 write_latency_ms=1e3 * sim.mean_latency(kind="update"),
@@ -44,13 +53,15 @@ def fig5_6_locality(ops_per_client: int = 3000,
 
 # ------------------------------------------------------------- Fig 7 & 8
 def fig7_8_distributions(ops_per_client: int = 3000,
-                         service: Optional[ServiceParams] = None) -> List[dict]:
+                         service: Optional[ServiceParams] = None,
+                         engine: str = "fast") -> List[dict]:
     """Update latency / throughput at 50% global for uniform/zipfian/latest."""
     rows = []
     for setting in ("edge", "cloud"):
         for dist in ("uniform", "zipfian", "latest"):
             sim = _run(setting, p_global=0.5, distribution=dist,
-                       ops_per_client=ops_per_client, service=service)
+                       ops_per_client=ops_per_client, service=service,
+                       engine=engine)
             rows.append(dict(
                 setting=setting, distribution=dist,
                 write_latency_ms=1e3 * sim.mean_latency(kind="update"),
@@ -62,14 +73,15 @@ def fig7_8_distributions(ops_per_client: int = 3000,
 # ------------------------------------------------------------ Fig 9 & 10
 def fig9_10_clients_local(client_counts=(100, 500, 1000, 2000),
                           total_ops: int = 20_000,
-                          service: Optional[ServiceParams] = None) -> List[dict]:
+                          service: Optional[ServiceParams] = None,
+                          engine: str = "fast") -> List[dict]:
     """Local-requests-only scaling with concurrent clients (single group)."""
     rows = []
     for setting in ("edge", "cloud"):
         for n_cli in client_counts:
             per_client = max(1, total_ops // max(n_cli, 1))
             sim = SimEdgeKV(setting=setting, group_sizes=(3,),
-                            service=service)
+                            service=service, engine=engine)
             sim.run_closed_loop(
                 threads_per_client=n_cli,
                 ops_per_client=per_client * n_cli,
@@ -85,7 +97,8 @@ def fig9_10_clients_local(client_counts=(100, 500, 1000, 2000),
 # ----------------------------------------------------------- Fig 11 & 12
 def fig11_12_clients_global(client_counts=(100, 500, 1000, 2000),
                             total_ops: int = 20_000,
-                            service: Optional[ServiceParams] = None) -> List[dict]:
+                            service: Optional[ServiceParams] = None,
+                            engine: str = "fast") -> List[dict]:
     """Scaling with clients at 50% global requests (3 groups)."""
     rows = []
     for setting in ("edge", "cloud"):
@@ -93,7 +106,7 @@ def fig11_12_clients_global(client_counts=(100, 500, 1000, 2000),
             per_group = max(1, n_cli // 3)
             ops = max(1, total_ops // 3)
             sim = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
-                            service=service)
+                            service=service, engine=engine)
             sim.run_closed_loop(
                 threads_per_client=per_group, ops_per_client=ops,
                 workload_kw=dict(p_global=0.5))
@@ -107,13 +120,14 @@ def fig11_12_clients_global(client_counts=(100, 500, 1000, 2000),
 
 # ----------------------------------------------------------------- Fig 13
 def fig13_request_rate(rates=(100, 200, 400, 800), duration: float = 20.0,
-                       service: Optional[ServiceParams] = None) -> List[dict]:
+                       service: Optional[ServiceParams] = None,
+                       engine: str = "fast") -> List[dict]:
     """Open-loop latency vs request rate at 50% global, 100 threads-worth."""
     rows = []
     for setting in ("edge", "cloud"):
         for rate in rates:
             sim = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
-                            service=service)
+                            service=service, engine=engine)
             sim.run_open_loop(rate_per_client=rate, duration=duration,
                               workload_kw=dict(p_global=0.5))
             rows.append(dict(
@@ -127,7 +141,7 @@ def fig13_request_rate(rates=(100, 200, 400, 800), duration: float = 20.0,
 def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
               ops_per_client: int = 2000, adds: int = 3,
               service: Optional[ServiceParams] = None,
-              seed: int = 0) -> List[dict]:
+              seed: int = 0, engine: str = "fast") -> List[dict]:
     """Elastic gateway churn under YCSB load (beyond-paper scenario).
 
     ``base_groups`` groups serve ``base_groups * clients_per_group``
@@ -140,10 +154,11 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
     rows = []
     for scenario in ("static", "churn"):
         sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
-                        service=service, seed=seed)
+                        service=service, seed=seed, engine=engine)
         if scenario == "churn":
             sim.env.process(sim.churn_proc(t_start=0.05, period=0.1,
                                            adds=adds))
+        t0 = time.perf_counter()
         sim.run_closed_loop(
             threads_per_client=clients_per_group,
             ops_per_client=ops_per_client,
@@ -158,8 +173,44 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
             throughput_ops=sim.throughput(),
             churn_events=len(sim.churn_events),
             keys_moved=sum(ev[3] for ev in sim.churn_events),
+            walltime_s=time.perf_counter() - t0,
         ))
     return rows
+
+
+# ------------------------------------------------------------- fig scale
+def fig_scale(groups: int = 100, clients_per_group: int = 100,
+              ops_per_client: int = 1000, p_global: float = 0.5,
+              service: Optional[ServiceParams] = None,
+              seed: int = 0, engine: str = "fast") -> List[dict]:
+    """Beyond-paper scale: 100 groups × 100 threads = 10k closed-loop
+    clients at 50% global data.
+
+    This is the scenario the vectorized engine unlocks — the generator
+    oracle spends ~10 heap events per op across 10k generators, an order
+    of magnitude more wall clock than the batched path. Deterministic for
+    a given seed (and bit-identical across engines, no churn here).
+    """
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * groups,
+                    service=service, seed=seed, engine=engine)
+    t0 = time.perf_counter()
+    sim.run_closed_loop(
+        threads_per_client=clients_per_group,
+        ops_per_client=ops_per_client,
+        workload_kw=dict(p_global=p_global))
+    wall = time.perf_counter() - t0
+    return [dict(
+        engine=engine, groups=groups,
+        clients=groups * clients_per_group,
+        ops=len(sim.records),
+        write_latency_ms=1e3 * sim.mean_latency(kind="update"),
+        read_latency_ms=1e3 * sim.mean_latency(kind="read"),
+        global_write_latency_ms=1e3 * sim.mean_latency(
+            kind="update", dtype="global"),
+        throughput_ops=sim.throughput(),
+        mean_hops=float(sim.records.columns()["hops"].mean()),
+        walltime_s=wall,
+    )]
 
 
 # ------------------------------------------------------------- validation
@@ -172,14 +223,15 @@ class ClaimCheck:
 
 
 def headline_claims(ops_per_client: int = 3000,
-                    service: Optional[ServiceParams] = None) -> List[ClaimCheck]:
+                    service: Optional[ServiceParams] = None,
+                    engine: str = "fast") -> List[ClaimCheck]:
     """The paper's abstract/§6 numbers, checked against the emulation."""
     checks: List[ClaimCheck] = []
 
     edge = _run("edge", p_global=0.5, ops_per_client=ops_per_client,
-                service=service)
+                service=service, engine=engine)
     cloud = _run("cloud", p_global=0.5, ops_per_client=ops_per_client,
-                 service=service)
+                 service=service, engine=engine)
     lat_gain = 1 - edge.mean_latency(kind="update") / cloud.mean_latency(
         kind="update")
     tput_gain = edge.throughput() / cloud.throughput() - 1
@@ -198,10 +250,10 @@ def headline_claims(ops_per_client: int = 3000,
     # the paper's own §7.1 fix (virtual nodes) our curve flattens. See
     # EXPERIMENTS.md §Repro.
     e0 = _run("edge", p_global=0.0, ops_per_client=ops_per_client,
-              service=service).mean_latency(kind="update")
+              service=service, engine=engine).mean_latency(kind="update")
     e50 = edge.mean_latency(kind="update")
     e100 = _run("edge", p_global=1.0, ops_per_client=ops_per_client,
-                service=service).mean_latency(kind="update")
+                service=service, engine=engine).mean_latency(kind="update")
     checks.append(ClaimCheck(
         "global share degrades performance (monotone 0<50<100)",
         "Fig 5 direction", 1e3 * (e50 - e0),
@@ -212,7 +264,8 @@ def headline_claims(ops_per_client: int = 3000,
     for dist in ("uniform", "zipfian", "latest"):
         lats[dist] = _run("edge", p_global=0.5, distribution=dist,
                           ops_per_client=ops_per_client,
-                          service=service).mean_latency(kind="update")
+                          service=service, engine=engine
+                          ).mean_latency(kind="update")
     checks.append(ClaimCheck(
         "latest is fastest distribution", "Fig 7",
         1e3 * lats["latest"],

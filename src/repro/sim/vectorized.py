@@ -1,0 +1,694 @@
+"""Vectorized execution backend for :class:`repro.sim.cluster.SimEdgeKV`.
+
+The generator oracle steps ~10 heap events per operation (transfer
+timeouts, resource acquire/release, response hops) through one Python
+generator per client thread — tens of millions of events at fig scale.
+This backend replaces all of that with batched array math plus one compact
+scan, selected via ``SimEdgeKV(engine="fast")`` or
+:class:`FastSimEdgeKV`.
+
+Why almost everything is closed-form
+------------------------------------
+Per op, every delay except the leader stage is a *deterministic* function
+of static op attributes: kind (request/response sizes), data type, the
+pre-drawn forward coin, and the Chord route (hop count + owner), none of
+which depend on other in-flight ops. So the client→storage→gateway
+transfer chains, the quorum RTT (all follower RTTs are identical, so the
+majority-th ack is a scalar per group size), and the ReadIndex round are
+precomputed as numpy column expressions / per-profile component tuples.
+Chord routes collapse too: a lookup path is a function of (start gateway,
+the key's successor vnode) only, so one route per such class covers every
+key in it.
+
+The only true serialization points are
+
+* each group leader's FIFO capacity-1 commit stage — op ``i``'s service
+  start is ``max(arrival_i, departure_{i-1})``, a cumulative-max
+  recurrence over ops in arrival order, and
+* the leader's LRU page-cache hit/miss sequence, which depends on the
+  *order* keys hit the leader.
+
+For **open-loop** runs arrivals are exogenous (Poisson), so both resolve
+in one per-group O(ops) pass: sort by arrival, replay the LRU once for the
+penalties, then ``departure = cumsum(svc) + cummax(arrival - exclusive
+cumsum(svc))`` — an associative max-plus scan, directly expressible as a
+``jax.lax.scan`` (or ``associative_scan``) for a kernels-flavored path.
+For **closed-loop** runs the next arrival of a thread depends on its
+previous completion, so the same recurrence is evaluated online: a heap
+holds exactly ONE event per op (its leader arrival) instead of ~10, and
+all delay components around the scan come from the precomputed columns.
+
+Exactness
+---------
+On closed-loop runs without churn the fast path reproduces the oracle's
+``OpRecord`` stream *bit-for-bit* (same seed): both engines consume the
+same :meth:`YCSBWorkload.batch_ops` schedules, the event engine breaks
+virtual-time ties by process id (see :mod:`repro.sim.events`), and delay
+components are accumulated in exactly the order the oracle's Timeout
+chain adds them (float addition is not associative, so component tuples
+are added sequentially, never pre-summed). Open-loop and churn runs match
+statistically: numpy arrival streams replace ``random.expovariate``, and
+membership/routing changes resolve at op-schedule time rather than
+mid-flight (a one-op-per-thread window around each churn event).
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+from typing import Dict, Generator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hashring import stable_hash
+from repro.core.kvstore import GLOBAL, LOCAL
+
+from .cluster import ACK_BYTES, SimEdgeKV, ThreadPlan
+from .events import Timeout
+from .ycsb import DTYPE_CODE, KIND_CODE, RECORD_BYTES, REQ_BYTES, YCSBWorkload
+
+LOCAL_CODE = DTYPE_CODE["local"]
+GLOBAL_CODE = DTYPE_CODE["global"]
+READ_CODE = KIND_CODE["read"]
+_VAL = ("v", RECORD_BYTES)
+
+
+class FastSimEdgeKV(SimEdgeKV):
+    """:class:`SimEdgeKV` pinned to the vectorized engine."""
+
+    def __init__(self, **kw):
+        kw["engine"] = "fast"
+        super().__init__(**kw)
+
+
+class _DelayModel:
+    """Scalar delay components, indexed by ``is_write`` where sizes differ.
+
+    Each value equals the argument of one oracle ``Timeout`` exactly (same
+    arithmetic expression), so sequential addition reproduces the oracle's
+    float accumulation.
+    """
+
+    def __init__(self, sim: SimEdgeKV):
+        net, svc = sim.net, sim.service
+        req = (REQ_BYTES, REQ_BYTES + RECORD_BYTES)          # [is_write]
+        resp = (REQ_BYTES + RECORD_BYTES, REQ_BYTES)
+        self.c_req = tuple(net.xfer("cli_st", b) for b in req)
+        self.c_resp = tuple(net.xfer("cli_st", b) for b in resp)
+        self.f_req = tuple(net.xfer("st_st", b) for b in req)
+        self.f_resp = tuple(net.xfer("st_st", b) for b in resp)
+        self.sg_req = tuple(net.xfer("st_gw", b) for b in req)
+        self.sg_resp = tuple(net.xfer("st_gw", b) for b in resp)
+        self.h_req = tuple(net.xfer("gw_gw", b) + svc.gw_route_s for b in req)
+        self.g_resp = tuple(net.xfer("gw_gw", b) for b in resp)
+        self.svc_base = (svc.read_s, svc.commit_s)
+        self.seek = svc.seek_s
+        self._net = net
+        self._svc = svc
+        self._quorum: Dict[int, float] = {}
+        self._readindex: Dict[int, float] = {}
+
+    def quorum(self, n: int) -> float:
+        """Majority-th follower ack after leader broadcast — all follower
+        RTTs are identical, so the sorted-select collapses to a scalar."""
+        q = self._quorum.get(n)
+        if q is None:
+            need = (n // 2 + 1) - 1
+            q = 0.0 if need <= 0 else (
+                self._net.xfer("st_st", RECORD_BYTES + ACK_BYTES)
+                + self._svc.follower_append_s
+                + self._net.xfer("st_st", ACK_BYTES))
+            self._quorum[n] = q
+        return q
+
+    def readindex(self, n: int) -> float:
+        r = self._readindex.get(n)
+        if r is None:
+            need = (n // 2 + 1) - 1
+            r = 0.0 if need <= 0 else 2 * self._net.xfer("st_st", ACK_BYTES)
+            self._readindex[n] = r
+        return r
+
+
+def _batch_routes(sim: SimEdgeKV, gw_of_code: List[str],
+                  client_codes: np.ndarray, key_indices: np.ndarray,
+                  keys: List[str]) -> Tuple[np.ndarray, np.ndarray]:
+    """(owner_code, hops) for each (client group code, key index) row.
+
+    One ``ring.route`` call per unique (gateway, successor-vnode) class —
+    a Chord lookup path depends on the target only through its successor
+    vnode, so a representative key per class routes for all of them.
+    """
+    ring = sim.ring
+    vh = np.asarray(ring._vhashes, dtype=np.uint64)
+    uk = np.unique(key_indices)
+    khash = np.fromiter((stable_hash(keys[int(k)]) for k in uk),
+                        dtype=np.uint64, count=len(uk))
+    pos = np.searchsorted(vh, khash, side="left") % len(vh)
+    pos_of_key = np.zeros(int(key_indices.max()) + 1, dtype=np.int64)
+    pos_of_key[uk] = pos
+    svn = pos_of_key[key_indices]
+    packed = client_codes.astype(np.int64) * len(vh) + svn
+    uniq, uidx, inv = np.unique(packed, return_index=True,
+                                return_inverse=True)
+    owner_u = np.empty(len(uniq), np.int32)
+    hops_u = np.empty(len(uniq), np.int32)
+    gcode = sim.records.group_code
+    for j in range(len(uniq)):
+        rep = int(uidx[j])
+        path = ring.route(gw_of_code[int(client_codes[rep])],
+                          keys[int(key_indices[rep])])
+        owner_u[j] = gcode(sim.group_of_gateway[path[-1]])
+        hops_u[j] = len(path) - 1
+    return owner_u[inv], hops_u[inv]
+
+
+class _FastEngine:
+    """Closed-loop fast core: one heap event per op around the leader scan."""
+
+    def __init__(self, sim: SimEdgeKV):
+        self.sim = sim
+        self.dm = _DelayModel(sim)
+        self._profiles: Dict[tuple, tuple] = {}
+        # per-group-code tables (grown by _sync_groups on membership events)
+        self.gid_of: List[str] = []
+        self.n_of: List[int] = []
+        self.free: List[float] = []
+        self.busy: List[float] = []
+        self.cache_d: List[dict] = []
+        self.cache_cap: List[int] = []
+        self.cache_hits: List[int] = []
+        self.cache_miss: List[int] = []
+        self.store_by_tier: Tuple[List[dict], List[dict]] = ([], [])
+        self.gw_of: List[str] = []
+        self._sync_groups()
+        # (group code, successor-vnode) -> [owner, hops, read prof, write
+        # prof]; cleared on membership change
+        self.route_memo: Dict[Tuple[int, int], list] = {}
+        self._khash: Dict[int, int] = {}      # key idx -> ring hash (stable)
+        self._pos_memo: Dict[int, int] = {}   # key idx -> successor vnode
+        self._home_memo: Dict[int, dict] = {}  # key idx -> owner store
+        self._local_prof: Dict[tuple, tuple] = {}
+        self.aux: Dict[int, Generator] = {}
+        self.heap: List[tuple] = []
+        self.last_time = 0.0
+
+    # ------------------------------------------------------------- groups
+    def _sync_groups(self) -> None:
+        sim = self.sim
+        ids = sim.records._group_ids
+        for c in range(len(self.gid_of), len(ids)):
+            gid = ids[c]
+            g = sim.groups[gid]
+            self.gid_of.append(gid)
+            self.n_of.append(g["n"])
+            self.free.append(0.0)
+            self.busy.append(0.0)
+            self.cache_d.append(g["page_cache"]._d)
+            self.cache_cap.append(g["page_cache"].capacity)
+            self.cache_hits.append(0)
+            self.cache_miss.append(0)
+            self.store_by_tier[0].append(g["state"].stores[LOCAL])
+            self.store_by_tier[1].append(g["state"].stores[GLOBAL])
+            self.gw_of.append(sim.gateway_of_group[gid])
+
+    # ----------------------------------------------------------- profiles
+    def _profile(self, key: tuple) -> tuple:
+        """(pre, svc_base, post) component tuples for one op shape.
+
+        ``key`` = (dtype, is_write, fwd, hops, remote, n_serving). The
+        tuples are added *sequentially* onto the running clock, mirroring
+        the oracle's Timeout chain term by term.
+        """
+        prof = self._profiles.get(key)
+        if prof is None:
+            dtype, w, fwd, hops, remote, n = key
+            dm = self.dm
+            if dtype == LOCAL_CODE:
+                pre = [dm.c_req[w]] + ([dm.f_req[w]] if fwd else [])
+                post = [dm.quorum(n) if w else dm.readindex(n)]
+                if fwd:
+                    post.append(dm.f_resp[w])
+                post.append(dm.c_resp[w])
+            else:
+                pre = ([dm.c_req[w], dm.sg_req[w]]
+                       + [dm.h_req[w]] * hops + [dm.sg_req[w]])
+                post = [dm.quorum(n) if w else dm.readindex(n), dm.sg_resp[w]]
+                if remote:
+                    post.append(dm.g_resp[w])
+                post += [dm.sg_resp[w], dm.c_resp[w]]
+            prof = self._profiles[key] = (tuple(pre), dm.svc_base[w],
+                                          tuple(post))
+        return prof
+
+    # ----------------------------------------------------------- planning
+    def load_plan(self, plan: List[ThreadPlan]) -> None:
+        sim = self.sim
+        counts = [len(tp.key_idx) for tp in plan]
+        bounds = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        self.n_ops = n_ops = int(bounds[-1])
+        self.thread_end = bounds[1:].tolist()
+        self.cursor = bounds[:-1].tolist()
+
+        def concat(field, dt):
+            if not plan:
+                return np.empty(0, dt)
+            return np.concatenate([getattr(tp, field) for tp in plan])
+
+        code = sim.records.group_code
+        self.client_code = np.concatenate(
+            [np.full(c, code(tp.gid), dtype=np.int32)
+             for c, tp in zip(counts, plan)]) if plan else np.empty(0, np.int32)
+        self.key_idx = concat("key_idx", np.int64)
+        self.kind = concat("kind", np.uint8)
+        self.dtype = concat("dtype", np.uint8)
+        self.fwd = concat("fwd", bool)
+        self.is_w = (self.kind != READ_CODE)
+
+        # aux processes (churn drivers) registered via env.process before
+        # the run; worker pids continue the same counter, matching the
+        # oracle's process-creation order
+        self.aux = dict(sim.env.pending)
+        sim.env.pending = []
+        pid_base = sim.env._next_pid
+        sim.env._next_pid += len(plan)
+        self.op_pid = (np.repeat(np.arange(len(plan)), counts)
+                       + pid_base).astype(np.int64) \
+            if plan else np.empty(0, np.int64)
+
+        # per-op key strings (shared key lists make this a gather)
+        self.op_key: List[str] = []
+        for tp in plan:
+            keys = tp.wl.keys
+            self.op_key.extend([keys[k] for k in tp.key_idx.tolist()])
+
+        # Local ops never route, so their shapes are membership-independent
+        # and always precomputable. Global ops go lazy once the membership
+        # epoch moves (churn), or from the start when the §7.2 location
+        # cache makes routing order-dependent.
+        self.lazy_always = bool(sim.gw_cache)
+        self.epoch0 = sim.churn_epoch
+        self.serving: List[int] = self.client_code.tolist()
+        self.hops: List[int] = [0] * n_ops
+        self.op_pre: List[tuple] = [()] * n_ops
+        self.op_svc: List[float] = [0.0] * n_ops
+        self.op_post: List[tuple] = [()] * n_ops
+        self._static_shapes(plan, globals_too=not self.lazy_always)
+
+        self._l_dtype = self.dtype.tolist()
+        self._l_is_w = self.is_w.tolist()
+        self._l_key_idx = self.key_idx.tolist()
+        self._l_fwd = self.fwd.tolist()
+        self._l_client = self.client_code.tolist()
+        self.t_start = [0.0] * n_ops
+        self.completion = [0.0] * n_ops
+        self.latency = [0.0] * n_ops
+
+    def _static_shapes(self, plan: List[ThreadPlan],
+                       globals_too: bool = True) -> None:
+        """Batch-resolve op routes and delay profiles up front as numpy
+        column expressions, valid for the membership at load time. With
+        ``globals_too=False`` only local rows are shaped (a §7.2 location
+        cache makes global routing order-dependent, so those stay lazy)."""
+        if not self.n_ops:
+            return
+        glob = self.dtype == GLOBAL_CODE
+        serving = self.client_code.copy()
+        hops = np.zeros(self.n_ops, dtype=np.int32)
+        if globals_too and glob.any():
+            owner, h = _batch_routes(self.sim, self.gw_of,
+                                     self.client_code[glob],
+                                     self.key_idx[glob], plan[0].wl.keys)
+            serving[glob] = owner
+            hops[glob] = h
+        remote = glob & (serving != self.client_code)
+        n_serving = np.asarray(self.n_of, dtype=np.int32)[serving]
+        shape_cols = np.stack(
+            [self.dtype.astype(np.int32), self.is_w.astype(np.int32),
+             self.fwd.astype(np.int32), hops, remote.astype(np.int32),
+             n_serving], axis=1)
+        uniq_shapes, inv = np.unique(shape_cols, axis=0, return_inverse=True)
+        profs = [self._profile((int(r[0]), int(r[1]), bool(r[2]), int(r[3]),
+                                bool(r[4]), int(r[5])))
+                 for r in uniq_shapes]
+        inv_l = inv.tolist()
+        self.op_pre = [profs[c][0] for c in inv_l]
+        self.op_svc = [profs[c][1] for c in inv_l]
+        self.op_post = [profs[c][2] for c in inv_l]
+        self.serving = serving.tolist()
+        self.hops = hops.tolist()
+
+    def _resolve(self, i: int) -> None:
+        """Lazy shape resolution at op-schedule time, against the *current*
+        ring membership and gateway location caches."""
+        sim = self.sim
+        d = self._l_dtype[i]
+        w = self._l_is_w[i]
+        gc = self._l_client[i]
+        if d == LOCAL_CODE:
+            lkey = (gc, w, self._l_fwd[i])
+            prof = self._local_prof.get(lkey)
+            if prof is None:
+                prof = self._local_prof[lkey] = self._profile(
+                    (d, w, self._l_fwd[i], 0, False, self.n_of[gc]))
+            self.serving[i] = gc
+        elif sim.gw_cache:
+            key = self.op_key[i]
+            gw = self.gw_of[gc]
+            cached = sim.gw_cache[gw].get(key)
+            if cached is not None:
+                owner_gw, hops = cached, (0 if cached == gw else 1)
+            else:
+                path = sim.ring.route(gw, key)
+                owner_gw, hops = path[-1], len(path) - 1
+                sim.gw_cache[gw].put(key, owner_gw)
+            owner = sim.records.group_code(sim.group_of_gateway[owner_gw])
+            self.serving[i] = owner
+            self.hops[i] = hops
+            prof = self._profile((d, w, False, hops, owner != gc,
+                                  self.n_of[owner]))
+        else:
+            ki = self._l_key_idx[i]
+            p = self._pos_memo.get(ki)
+            if p is None:
+                kh = self._khash.get(ki)
+                if kh is None:
+                    kh = self._khash[ki] = stable_hash(self.op_key[i])
+                vhs = sim.ring._vhashes
+                p = bisect.bisect_left(vhs, kh)
+                if p == len(vhs):
+                    p = 0
+                self._pos_memo[ki] = p
+            ent = self.route_memo.get((gc, p))
+            if ent is None:
+                path = sim.ring.route(self.gw_of[gc], self.op_key[i])
+                owner = sim.records.group_code(sim.group_of_gateway[path[-1]])
+                ent = self.route_memo[(gc, p)] = [owner, len(path) - 1,
+                                                  None, None]
+            owner = ent[0]
+            prof = ent[2 + w]
+            if prof is None:
+                prof = ent[2 + w] = self._profile(
+                    (d, w, False, ent[1], owner != gc, self.n_of[owner]))
+            self.serving[i] = owner
+            self.hops[i] = ent[1]
+        self.op_pre[i], self.op_svc[i], self.op_post[i] = prof
+
+    # ---------------------------------------------------------------- run
+    def _step_aux(self, pid: int, t: float) -> None:
+        sim = self.sim
+        sim.env.now = t
+        if t > self.last_time:
+            self.last_time = t
+        gen = self.aux[pid]
+        epoch = sim.churn_epoch
+        try:
+            ev = gen.send(None)
+        except StopIteration:
+            del self.aux[pid]
+        else:
+            if not isinstance(ev, Timeout):
+                raise TypeError(
+                    "fast-engine auxiliary processes may only yield Timeout")
+            heapq.heappush(self.heap, (t + ev.delay, pid, -1))
+        if sim.churn_epoch != epoch:
+            self._sync_groups()
+            self.route_memo.clear()
+            self._pos_memo.clear()
+            self._home_memo.clear()
+
+    def run(self) -> None:
+        sim = self.sim
+        heap = self.heap
+        cursor, thread_end = self.cursor, self.thread_end
+        op_pre, op_svc, op_post = self.op_pre, self.op_svc, self.op_post
+        op_pid = self.op_pid.tolist()
+        serving, op_key = self.serving, self.op_key
+        free, busy = self.free, self.busy
+        cache_d, cache_cap = self.cache_d, self.cache_cap
+        cache_hits, cache_miss = self.cache_hits, self.cache_miss
+        stores = self.store_by_tier
+        dtypes, is_w, l_key_idx = self._l_dtype, self._l_is_w, self._l_key_idx
+        t_start, completion, latency = \
+            self.t_start, self.completion, self.latency
+        seek = self.dm.seek
+        churn_events = sim.churn_events
+        home_memo, khash = self._home_memo, self._khash
+        lazy_always, epoch0 = self.lazy_always, self.epoch0
+        pop, push = heapq.heappop, heapq.heappush
+        max_completion = 0.0
+
+        # start events: aux processes first (they were created first), then
+        # every thread's first op — at the current virtual time, matching
+        # the oracle when a sim is driven more than once
+        base = sim.env.now
+        for pid in self.aux:
+            heap.append((base, pid, -1))
+        for tau in range(len(cursor)):
+            i = cursor[tau]
+            if i < thread_end[tau]:
+                if lazy_always and dtypes[i]:
+                    self._resolve(i)
+                t_start[i] = base
+                a = base
+                for comp in op_pre[i]:
+                    a += comp
+                heap.append((a, op_pid[i], tau))
+        heapq.heapify(heap)
+
+        while heap:
+            a, pid, tau = pop(heap)
+            if tau < 0:
+                self._step_aux(pid, a)
+                continue
+            i = cursor[tau]
+            g = serving[i]
+            # leader FIFO commit stage: the cumulative-max recurrence
+            # dep = max(arrival, prev_departure) + service, online
+            fs = free[g]
+            start = a if a > fs else fs
+            key = op_key[i]
+            d = cache_d[g]
+            if key in d:
+                d.move_to_end(key)
+                cache_hits[g] += 1
+                svc = op_svc[i]  # + 0.0 penalty, exact
+            else:
+                cache_miss[g] += 1
+                d[key] = True
+                if len(d) > cache_cap[g]:
+                    d.popitem(last=False)
+                svc = op_svc[i] + seek
+            dep = start + svc
+            free[g] = dep
+            busy[g] += svc
+            dt = dtypes[i]
+            if is_w[i]:
+                if dt and churn_events:
+                    # the key may have been re-homed while in flight: the
+                    # write follows the handoff (core-layer semantics)
+                    ki = l_key_idx[i]
+                    store = home_memo.get(ki)
+                    if store is None:
+                        kh = khash.get(ki)
+                        if kh is None:
+                            kh = khash[ki] = stable_hash(key)
+                        owner_gid = sim.group_of_gateway[
+                            sim.ring.locate_hash(kh)]
+                        store = home_memo[ki] = \
+                            sim.groups[owner_gid]["state"].stores[GLOBAL]
+                    store[key] = _VAL
+                else:
+                    stores[dt][g][key] = _VAL
+            c = dep
+            for comp in op_post[i]:
+                c += comp
+            latency[i] = c - t_start[i]
+            completion[i] = c
+            if c > max_completion:
+                max_completion = c
+            nxt = i + 1
+            if nxt < thread_end[tau]:
+                cursor[tau] = nxt
+                if dtypes[nxt] and (lazy_always
+                                    or sim.churn_epoch != epoch0):
+                    self._resolve(nxt)
+                t_start[nxt] = c
+                a2 = c
+                for comp in op_pre[nxt]:
+                    a2 += comp
+                push(heap, (a2, pid, tau))
+
+        self._finish(max_completion)
+
+    def _finish(self, max_completion: float) -> None:
+        sim = self.sim
+        sim.env.now = max(max_completion, self.last_time)
+        for c, gid in enumerate(self.gid_of):
+            g = sim.groups[gid]
+            if self.busy[c]:
+                g["leader"].busy_time += self.busy[c]
+            g["page_cache"].hits += self.cache_hits[c]
+            g["page_cache"].misses += self.cache_miss[c]
+        if not self.n_ops:
+            return
+        comp = np.asarray(self.completion)
+        # the oracle appends records at completion-event execution, i.e. in
+        # (completion time, pid) order — reproduce it exactly
+        order = np.lexsort((self.op_pid, comp))
+        sim.records.extend_columns(
+            np.asarray(self.t_start)[order],
+            np.asarray(self.latency)[order],
+            self.kind[order], self.dtype[order],
+            self.client_code[order],
+            np.asarray(self.hops, dtype=np.int32)[order])
+
+
+def run_closed_loop_fast(sim: SimEdgeKV, plan: List[ThreadPlan]) -> None:
+    eng = _FastEngine(sim)
+    eng.load_plan(plan)
+    eng.run()
+
+
+# --------------------------------------------------------------- open loop
+def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
+                       workload_kw: dict) -> None:
+    """Fully batched open-loop run (Fig 13): exogenous Poisson arrivals
+    mean there is no closed-loop feedback, so the leader stage resolves in
+    one per-group pass — LRU replay for penalties, then the max-plus scan
+    ``dep = cumsum(svc) + cummax(arr - exclusive_cumsum(svc))`` (the
+    ``lax.scan``-shaped recurrence; numpy's ``maximum.accumulate`` here).
+    """
+    if sim.env.pending:
+        raise NotImplementedError(
+            "fast open-loop runs do not support auxiliary processes; "
+            "use engine='oracle' for churn + open loop")
+    dm = _DelayModel(sim)
+    gcode = sim.records.group_code
+    ids = sim.records._group_ids
+
+    segs = []
+    for gi, gid in enumerate(list(sim.groups)):
+        if sim.groups[gid]["retired"]:
+            continue
+        wl = YCSBWorkload(seed=2000 + gi, **workload_kw)
+        sim.client_groups.add(gid)
+        if duration <= 0:
+            continue
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [(2000 + gi) & 0xFFFFFFFF, sim._arrival_seed(gid)]))
+        # arrival k fires iff arrival k-1 lands before t_end (oracle's
+        # while-loop semantics), so one arrival may overshoot duration
+        t = np.empty(0)
+        chunk = max(64, int(rate * duration * 1.2) + 8)
+        while t.size == 0 or t[-1] < duration:
+            e = rng.exponential(1.0 / rate, size=chunk)
+            t = np.concatenate([t, (t[-1] if t.size else 0.0) + np.cumsum(e)])
+        count = int(np.searchsorted(t, duration, side="left")) + 1
+        t0 = t[:count] + sim.env.now  # arrivals start at current virtual time
+        key_idx, kind, dtype = wl.batch_ops(count, rng)
+        n = sim.groups[gid]["n"]
+        fwd = ((dtype == LOCAL_CODE)
+               & (rng.random(count) < (n - 1) / n))
+        segs.append((gcode(gid), wl, t0, key_idx, kind, dtype, fwd))
+    if not segs:
+        return
+
+    keys = segs[0][1].keys
+    client = np.concatenate([np.full(len(s[2]), s[0], dtype=np.int32)
+                             for s in segs])
+    t0 = np.concatenate([s[2] for s in segs])
+    key_idx = np.concatenate([s[3] for s in segs])
+    kind = np.concatenate([s[4] for s in segs])
+    dtype = np.concatenate([s[5] for s in segs])
+    fwd = np.concatenate([s[6] for s in segs])
+    n_ops = len(t0)
+    is_w = kind != READ_CODE
+    glob = dtype == GLOBAL_CODE
+
+    # routing: one Chord route per unique (gateway, successor-vnode) class;
+    # with a §7.2 location cache, consult/populate the per-gateway caches
+    # in arrival order instead (hit/miss sequence is order-dependent)
+    serving = client.copy()
+    hops = np.zeros(n_ops, dtype=np.int32)
+    if glob.any():
+        gw_of_code = [sim.gateway_of_group[g] for g in ids]
+        if sim.gw_cache:
+            gsel = np.nonzero(glob)[0]
+            for i in gsel[np.argsort(t0[gsel], kind="stable")].tolist():
+                gw = gw_of_code[client[i]]
+                key = keys[key_idx[i]]
+                cache = sim.gw_cache[gw]
+                cached = cache.get(key)
+                if cached is not None:
+                    owner_gw, h = cached, (0 if cached == gw else 1)
+                else:
+                    path = sim.ring.route(gw, key)
+                    owner_gw, h = path[-1], len(path) - 1
+                    cache.put(key, owner_gw)
+                serving[i] = gcode(sim.group_of_gateway[owner_gw])
+                hops[i] = h
+        else:
+            owner, h = _batch_routes(sim, gw_of_code, client[glob],
+                                     key_idx[glob], keys)
+            serving[glob] = owner
+            hops[glob] = h
+    remote = glob & (serving != client)
+
+    # per-op delay columns (masked sequential adds, oracle term order)
+    def by_w(pair):
+        return np.where(is_w, pair[1], pair[0])
+
+    c_req, c_resp = by_w(dm.c_req), by_w(dm.c_resp)
+    f_req, f_resp = by_w(dm.f_req), by_w(dm.f_resp)
+    sg_req, sg_resp = by_w(dm.sg_req), by_w(dm.sg_resp)
+    h_req, g_resp = by_w(dm.h_req), by_w(dm.g_resp)
+    lf = (~glob) & fwd
+    arr = t0 + c_req
+    arr = np.where(lf, arr + f_req, arr)
+    arr = np.where(glob, arr + sg_req, arr)
+    for k in range(int(hops.max()) if n_ops else 0):
+        arr = np.where(hops > k, arr + h_req, arr)
+    arr = np.where(glob, arr + sg_req, arr)
+
+    # leader stage: per-group LRU replay + max-plus scan in arrival order
+    dep = np.empty(n_ops)
+    svc_base = np.where(is_w, dm.svc_base[1], dm.svc_base[0])
+    for g in np.unique(serving).tolist():
+        grp = sim.groups[ids[g]]
+        sel = np.nonzero(serving == g)[0]
+        order = sel[np.lexsort((sel, arr[sel]))]
+        cache = grp["page_cache"]
+        state = grp["state"]
+        pens = np.zeros(len(order))
+        kil = key_idx[order].tolist()
+        wrl = is_w[order].tolist()
+        dtl = dtype[order].tolist()
+        for j, ki in enumerate(kil):
+            key = keys[ki]
+            if cache.get(key) is None:
+                pens[j] = dm.seek
+            cache.put(key, True)
+            if wrl[j]:
+                state.apply(("put",
+                             GLOBAL if dtl[j] == GLOBAL_CODE else LOCAL,
+                             key, _VAL))
+        svc = svc_base[order] + pens
+        s = np.cumsum(svc)
+        dep[order] = s + np.maximum.accumulate(arr[order] - (s - svc))
+        grp["leader"].busy_time += float(svc.sum())
+
+    sizes = [sim.groups[g]["n"] for g in ids]
+    q_by_code = np.asarray([dm.quorum(n) for n in sizes])
+    ri_by_code = np.asarray([dm.readindex(n) for n in sizes])
+    q_or_ri = np.where(is_w, q_by_code[serving], ri_by_code[serving])
+    comp = dep + q_or_ri
+    comp = np.where(glob, comp + sg_resp, comp)
+    comp = np.where(remote, comp + g_resp, comp)
+    comp = np.where(glob, comp + sg_resp, comp)
+    comp = np.where(lf, comp + f_resp, comp)
+    comp = comp + c_resp
+
+    order = np.lexsort((np.arange(n_ops), comp))
+    sim.records.extend_columns(t0[order], (comp - t0)[order], kind[order],
+                               dtype[order], client[order], hops[order])
+    sim.env.now = max(sim.env.now, float(comp.max()))

@@ -19,10 +19,31 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 RECORD_BYTES = 1000  # YCSB default record size
 REQ_BYTES = 64       # request header / key
+
+# integer codes shared by the batched schedules, the SoA record buffer and
+# the vectorized engine (repro.sim.records / repro.sim.vectorized)
+KINDS = ("read", "update", "insert")
+DTYPES = ("local", "global")
+KIND_CODE = {k: i for i, k in enumerate(KINDS)}
+DTYPE_CODE = {d: i for i, d in enumerate(DTYPES)}
+
+
+_KEY_CACHE: dict = {}
+
+
+def _key_strings(n: int) -> List[str]:
+    """YCSB key space (shared & memoized — every workload with the same
+    ``n_records`` uses the identical key list)."""
+    keys = _KEY_CACHE.get(n)
+    if keys is None:
+        keys = _KEY_CACHE[n] = [f"user{i:08d}" for i in range(n)]
+    return keys
 
 
 @dataclass
@@ -31,6 +52,11 @@ class Op:
     key: str
     dtype: str     # 'local' | 'global'
     value_bytes: int = RECORD_BYTES
+    # pre-drawn leader-forward coin (Algorithm 1 line 6). None => the
+    # simulator draws it live from its own RNG; batched schedules pre-draw
+    # it per thread so the generator and vectorized engines see the same
+    # stream regardless of event interleaving.
+    fwd: Optional[bool] = None
 
 
 class YCSBWorkload:
@@ -55,22 +81,22 @@ class YCSBWorkload:
         self.distribution = distribution
         self.p_global = p_global
         self.rng = random.Random(seed)
-        self.keys = [f"user{i:08d}" for i in range(n_records)]
-        order = list(range(n_records))
-        self.rng.shuffle(order)
+        self.keys = _key_strings(n_records)
+        # hotset membership is seed-derived workload state shared by both
+        # engines; a vectorized permutation replaces the O(n) Fisher-Yates
+        order = np.random.default_rng(
+            np.random.SeedSequence([seed & 0xFFFFFFFF, 0x5E7])
+        ).permutation(n_records)
         k = max(1, int(hotset_frac * n_records))
-        self.hotset = order[:k]
-        self.coldset = order[k:]
+        self._hotset_arr = order[:k].astype(np.int64)
+        self._coldset_arr = order[k:].astype(np.int64)
+        self.hotset = self._hotset_arr.tolist()
+        self.coldset = self._coldset_arr.tolist()
         self.hot_op_frac = hot_op_frac
         # precompute zipf CDF over recency ranks for 'latest'
-        self._latest_weights = [1.0 / ((r + 1) ** zipf_s)
-                                for r in range(n_records)]
-        tot = sum(self._latest_weights)
-        acc, cdf = 0.0, []
-        for w in self._latest_weights:
-            acc += w / tot
-            cdf.append(acc)
-        self._latest_cdf = cdf
+        w = 1.0 / np.arange(1.0, n_records + 1) ** zipf_s
+        self._latest_cdf_arr = np.cumsum(w / w.sum())
+        self._latest_cdf = self._latest_cdf_arr.tolist()
 
     # ------------------------------------------------------------ sampling
     def _draw_index(self) -> int:
@@ -98,3 +124,39 @@ class YCSBWorkload:
 
     def run_ops(self, count: int) -> List[Op]:
         return [self.next_op() for _ in range(count)]
+
+    # --------------------------------------------------------- batched path
+    def batch_ops(self, count: int, rng: np.random.Generator
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Draw ``count`` ops in bulk with a numpy RNG.
+
+        Returns ``(key_idx, kind, dtype)`` arrays (``kind``/``dtype`` use
+        the :data:`KIND_CODE`/:data:`DTYPE_CODE` integer codes). This is the
+        schedule source for both simulator engines: the generator oracle
+        replays the same arrays one :class:`Op` at a time, the vectorized
+        engine consumes them as columns. The ``latest`` sampler is a single
+        ``searchsorted`` over the precomputed zipf CDF instead of the
+        per-op ``bisect`` loop of :meth:`next_op`.
+        """
+        if self.distribution == "uniform":
+            idx = rng.integers(0, self.n, size=count)
+        elif self.distribution == "zipfian":
+            hot = rng.random(count) < self.hot_op_frac
+            hotset, coldset = self._hotset_arr, self._coldset_arr
+            hi = rng.integers(0, len(hotset), size=count)
+            if len(coldset):
+                ci = rng.integers(0, len(coldset), size=count)
+                idx = np.where(hot, hotset[hi], coldset[ci])
+            else:
+                idx = hotset[hi]
+        else:  # latest: rank 0 = newest (highest index, insertion order)
+            r = np.searchsorted(self._latest_cdf_arr, rng.random(count),
+                                side="left")
+            idx = self.n - 1 - np.minimum(r, self.n - 1)
+        kind = np.where(rng.random(count) < self.read_prop,
+                        KIND_CODE["read"], KIND_CODE["update"]
+                        ).astype(np.uint8)
+        dtype = np.where(rng.random(count) < self.p_global,
+                         DTYPE_CODE["global"], DTYPE_CODE["local"]
+                         ).astype(np.uint8)
+        return idx.astype(np.int64), kind, dtype

@@ -342,10 +342,11 @@ def test_sim_churn_deterministic():
     assert a.churn_events == b.churn_events
 
 
-@pytest.mark.slow
-def test_fig_churn_experiment():
+@pytest.mark.parametrize("engine", [
+    "fast", pytest.param("oracle", marks=pytest.mark.slow)])
+def test_fig_churn_experiment(engine):
     from repro.sim.experiments import fig_churn
-    rows = fig_churn(ops_per_client=500)
+    rows = fig_churn(ops_per_client=500, engine=engine)
     by = {r["scenario"]: r for r in rows}
     assert by["static"]["churn_events"] == 0
     assert by["churn"]["churn_events"] == 6

@@ -1,0 +1,279 @@
+"""Fast-engine equivalence: the vectorized backend must reproduce the
+generator oracle op-for-op (bit-exact) on closed-loop no-churn runs, and
+within tight statistical tolerance on open-loop/churn runs."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.sim import FastSimEdgeKV, SimEdgeKV
+
+COLUMNS = ("t_start", "latency", "kind", "dtype", "group", "hops")
+
+
+def both(init, run, churn_kw=None):
+    sims = []
+    for engine in ("oracle", "fast"):
+        sim = SimEdgeKV(engine=engine, **init)
+        if churn_kw:
+            sim.env.process(sim.churn_proc(**churn_kw))
+        sim.run_closed_loop(**run)
+        sims.append(sim)
+    return sims
+
+
+def assert_exact(oracle, fast):
+    a, b = oracle.records.columns(), fast.records.columns()
+    assert len(oracle.records) == len(fast.records)
+    for col in COLUMNS:
+        assert np.array_equal(a[col], b[col]), col
+
+
+@pytest.mark.parametrize("setting", ["edge", "cloud"])
+@pytest.mark.parametrize("dist", ["uniform", "zipfian", "latest"])
+@pytest.mark.parametrize("p_global", [0.0, 0.5, 1.0])
+def test_fast_matches_oracle_exactly(setting, dist, p_global):
+    """Op-for-op equality (latency, kind, dtype, hops) across settings x
+    distributions x p_global on a small 3-group config."""
+    o, f = both(
+        dict(setting=setting, seed=2),
+        dict(threads_per_client=15, ops_per_client=150,
+             workload_kw=dict(p_global=p_global, distribution=dist)))
+    assert_exact(o, f)
+
+
+def test_fast_exact_under_contention():
+    """100 threads against a tiny keyspace: leader queueing and page-cache
+    eviction order are fully exercised and must still match bit-for-bit."""
+    o, f = both(
+        dict(setting="edge", seed=0),
+        dict(threads_per_client=100, ops_per_client=800,
+             workload_kw=dict(p_global=0.5, n_records=400)))
+    assert_exact(o, f)
+
+
+def test_fast_exact_single_and_heterogeneous_groups():
+    for sizes, pg in (((3,), 0.0), ((1, 3, 5), 0.7)):
+        o, f = both(
+            dict(setting="edge", seed=4, group_sizes=sizes),
+            dict(threads_per_client=10, ops_per_client=120,
+                 workload_kw=dict(p_global=pg)))
+        assert_exact(o, f)
+
+
+def test_fast_exact_with_virtual_nodes_and_seed_offset():
+    o, f = both(
+        dict(setting="edge", seed=5, virtual_nodes=4, group_sizes=(3,) * 4),
+        dict(threads_per_client=10, ops_per_client=120,
+             workload_kw=dict(p_global=1.0), seed_offset=7))
+    assert_exact(o, f)
+
+
+def test_fast_sim_sibling_class_and_metrics():
+    f = FastSimEdgeKV(setting="edge", seed=1)
+    assert f.engine == "fast"
+    f.run_closed_loop(threads_per_client=10, ops_per_client=100,
+                      workload_kw=dict(p_global=0.5))
+    o = SimEdgeKV(setting="edge", seed=1)
+    o.run_closed_loop(threads_per_client=10, ops_per_client=100,
+                      workload_kw=dict(p_global=0.5))
+    assert f.mean_latency() == o.mean_latency()
+    assert f.mean_latency(kind="update", dtype="global") == \
+        o.mean_latency(kind="update", dtype="global")
+    assert f.throughput() == o.throughput()
+    assert f.client_spans == o.client_spans
+
+
+def test_record_array_list_compat():
+    """SoA buffer still behaves like the old List[OpRecord] for consumers."""
+    sim = FastSimEdgeKV(setting="edge", seed=0)
+    sim.run_closed_loop(threads_per_client=5, ops_per_client=50,
+                        workload_kw=dict(p_global=0.5))
+    recs = sim.records
+    assert len(recs) == 150
+    as_list = list(recs)
+    assert as_list[0].latency == recs[0].latency
+    assert recs[-1].kind in ("read", "update")
+    assert all(r.group in ("g0", "g1", "g2") for r in as_list)
+    # vectorized metrics agree with the naive loop over the views
+    sel = [r.latency for r in as_list if r.kind == "read"]
+    assert np.isclose(sim.mean_latency(kind="read"), sum(sel) / len(sel))
+    # per-group aggregates computed in one pass
+    count, t0, t1 = recs.group_stats()["g0"]
+    g0 = [r for r in as_list if r.group == "g0"]
+    assert count == len(g0)
+    assert t1 == max(r.t_start + r.latency for r in g0)
+
+
+def test_fast_state_matches_oracle_state():
+    """Both engines apply committed writes to the same real StorageModule
+    state machines."""
+    o, f = both(
+        dict(setting="edge", seed=6),
+        dict(threads_per_client=10, ops_per_client=200,
+             workload_kw=dict(p_global=0.5, n_records=300)))
+    for gid in o.groups:
+        assert o.groups[gid]["state"].stores == f.groups[gid]["state"].stores
+
+
+def test_fast_churn_statistical_tolerance():
+    """Membership churn resolves at op-schedule time on the fast path (vs
+    mid-flight in the oracle) — means must agree within 2%, and the churn
+    schedule itself must be identical."""
+    churn = dict(t_start=0.05, period=0.1, adds=2)
+    o, f = both(
+        dict(setting="edge", seed=0, group_sizes=(3,) * 6),
+        dict(threads_per_client=50, ops_per_client=500,
+             workload_kw=dict(p_global=0.5, n_records=2000)),
+        churn_kw=churn)
+    assert len(o.records) == len(f.records)
+    assert [e[1:3] for e in o.churn_events] == [e[1:3] for e in f.churn_events]
+    assert len(f.churn_events) == 4
+    assert sum(e[3] for e in f.churn_events) > 0
+    for kind in (None, "update", "read"):
+        mo, mf = o.mean_latency(kind=kind), f.mean_latency(kind=kind)
+        assert abs(mf - mo) / mo < 0.02, kind
+    assert abs(f.throughput() - o.throughput()) / o.throughput() < 0.02
+
+
+def test_fast_churn_no_stranded_state():
+    """After churn settles on the fast engine, every global key lives only
+    at its authoritative ring owner."""
+    from repro.core.kvstore import GLOBAL as G
+
+    sim = FastSimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 6)
+    sim.env.process(sim.churn_proc(t_start=0.01, period=0.05, adds=2))
+    sim.run_closed_loop(threads_per_client=50, ops_per_client=300,
+                        workload_kw=dict(p_global=0.5, n_records=500))
+    assert len(sim.churn_events) == 4
+    for gid, g in sim.groups.items():
+        for key in g["state"].stores[G]:
+            owner = sim.group_of_gateway[sim.ring.locate(key)]
+            assert owner == gid, (gid, key, owner)
+
+
+def test_fast_gateway_cache_mode():
+    """§7.2 location-cache runs stay close to the oracle (cache op order
+    shifts to schedule time, so only statistical agreement is promised)."""
+    def run(engine):
+        sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 6,
+                        gateway_cache=2048, engine=engine)
+        sim.run_closed_loop(
+            threads_per_client=20, ops_per_client=300,
+            workload_kw=dict(p_global=0.7, distribution="zipfian",
+                             n_records=800))
+        return sim
+
+    o, f = run("oracle"), run("fast")
+    assert abs(f.mean_latency() - o.mean_latency()) / o.mean_latency() < 0.02
+    # cached locations must match the ring exactly, as in the oracle
+    for gw, cache in f.gw_cache.items():
+        for key, owner in cache._d.items():
+            assert owner == f.ring.locate(key), (gw, key)
+
+
+def test_fast_open_loop_uses_gateway_cache():
+    """Regression: the batched open-loop path must route through the §7.2
+    location caches too — hop counts and hit counters, not just latency."""
+    def run(engine):
+        sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 6,
+                        gateway_cache=4096, engine=engine)
+        sim.run_open_loop(rate_per_client=200, duration=2.0,
+                          workload_kw=dict(p_global=0.9,
+                                           distribution="zipfian",
+                                           n_records=500))
+        return sim
+
+    o, f = run("oracle"), run("fast")
+    hits_o = sum(c.hits for c in o.gw_cache.values())
+    hits_f = sum(c.hits for c in f.gw_cache.values())
+    assert hits_f > 0
+    assert abs(hits_f - hits_o) / hits_o < 0.1
+    mh_o = float(o.records.columns()["hops"].mean())
+    mh_f = float(f.records.columns()["hops"].mean())
+    assert abs(mh_f - mh_o) < 0.1
+    assert abs(f.mean_latency() - o.mean_latency()) / o.mean_latency() < 0.02
+
+
+def test_fast_open_loop_tolerance_and_determinism():
+    def run(engine, seed=0):
+        sim = SimEdgeKV(setting="edge", seed=seed, engine=engine)
+        sim.run_open_loop(rate_per_client=300, duration=5.0,
+                          workload_kw=dict(p_global=0.5))
+        return sim
+
+    o, f = run("oracle"), run("fast")
+    # numpy streams replace random.expovariate: op counts within 5%,
+    # means within 2%
+    assert abs(len(f.records) - len(o.records)) / len(o.records) < 0.05
+    assert abs(f.mean_latency() - o.mean_latency()) / o.mean_latency() < 0.02
+    f2 = run("fast")
+    assert np.array_equal(f.records.latency, f2.records.latency)
+    # different seed => different trace (the seed reaches the arrivals)
+    f3 = run("fast", seed=9)
+    assert not np.array_equal(f.records.latency, f3.records.latency)
+
+
+def test_fast_open_loop_rejects_aux_processes():
+    sim = FastSimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 3)
+    sim.env.process(sim.churn_proc(t_start=0.01, period=0.05, adds=1))
+    with pytest.raises(NotImplementedError):
+        sim.run_open_loop(rate_per_client=100, duration=0.5,
+                          workload_kw=dict(p_global=0.5))
+
+
+def test_deferred_environment_cannot_run():
+    sim = FastSimEdgeKV(setting="edge", seed=0)
+    with pytest.raises(RuntimeError):
+        sim.env.run()
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        SimEdgeKV(setting="edge", engine="warp")
+
+
+@pytest.mark.slow
+def test_fast_tolerance_at_fig_scale():
+    """fig_churn scale (10 groups / 1000 clients): the engines agree within
+    0.5% on every headline metric."""
+    o, f = both(
+        dict(setting="edge", seed=0, group_sizes=(3,) * 10),
+        dict(threads_per_client=100, ops_per_client=2000,
+             workload_kw=dict(p_global=0.5, n_records=5000)),
+        churn_kw=dict(t_start=0.05, period=0.1, adds=3))
+    for kind, dtype in ((None, None), ("update", None), ("update", "global")):
+        mo = o.mean_latency(kind=kind, dtype=dtype)
+        mf = f.mean_latency(kind=kind, dtype=dtype)
+        assert abs(mf - mo) / mo < 0.005, (kind, dtype)
+    assert abs(f.throughput() - o.throughput()) / o.throughput() < 0.005
+
+
+@pytest.mark.slow
+def test_fast_engine_speedup_at_fig_churn_scale():
+    """Acceptance: >=5x wall-clock at 10 groups / 1000 clients / 2000 ops."""
+    def run(engine):
+        sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 10,
+                        engine=engine)
+        t0 = time.perf_counter()
+        sim.run_closed_loop(threads_per_client=100, ops_per_client=2000,
+                            workload_kw=dict(p_global=0.5, n_records=5000))
+        return time.perf_counter() - t0
+
+    run("fast")  # warm numpy/route caches out of the measurement
+    t_fast = min(run("fast") for _ in range(3))
+    t_oracle = min(run("oracle") for _ in range(2))
+    assert t_oracle / t_fast >= 5.0, (t_oracle, t_fast)
+
+
+@pytest.mark.slow
+def test_fig_scale_experiment():
+    from repro.sim.experiments import fig_scale
+    rows = fig_scale(ops_per_client=1000)
+    r = rows[0]
+    assert r["clients"] == 10_000 and r["groups"] == 100
+    assert r["ops"] == 100_000
+    assert r["throughput_ops"] > 0
+    assert r["global_write_latency_ms"] > r["write_latency_ms"] * 0.5
+    # benchmark-tractable: well under a minute even on a loaded box
+    assert r["walltime_s"] < 60
