@@ -47,11 +47,17 @@ print(f"writes while owner down are rejected: ok={w.ok} "
       "(backup stays read-only so states never diverge)")
 
 # --- testbed emulation: the same protocol under YCSB load ---------------
-# engine="fast" selects the vectorized simulator backend (batched numpy op
-# schedules + a per-group commit-stage scan) — bit-identical latency
-# traces to the generator oracle (engine="oracle", the default) on
-# closed-loop runs, at ~an order of magnitude less wall clock. All
-# figure runners in repro.sim.experiments use it by default.
+# Engine matrix:
+#   engine="oracle"  one Python generator per client thread stepped by the
+#                    event heap — the semantic ground truth.
+#   engine="fast"    vectorized backend (batched numpy op schedules + a
+#                    per-group max-plus commit-stage scan via
+#                    repro.kernels.maxplus_scan) — bit-identical latency
+#                    traces to the oracle on closed-loop runs, ~10x less
+#                    wall clock. Open loop + churn runs statistically.
+#   run_sweep(...)   the sweep engine: N open-loop configurations
+#                    jit-compiled into ONE JAX array program — each point
+#                    identical to an engine="fast" run on the same seeds.
 from repro.sim import SimEdgeKV
 
 sim = SimEdgeKV(setting="edge", seed=0, engine="fast")
@@ -59,5 +65,24 @@ sim.run_closed_loop(threads_per_client=100, ops_per_client=1000,
                     workload_kw=dict(p_global=0.5))
 print(f"emulated 300 clients x YCSB-A at 50% global: "
       f"write latency {1e3 * sim.mean_latency(kind='update'):.1f} ms, "
+      f"p99 {1e3 * sim.tail_latency(99):.1f} ms, "
       f"throughput {sim.throughput():.0f} ops/s "
       f"({len(sim.records)} ops, vectorized engine)")
+
+# --- parameter sweeps: a whole what-if grid as one array program --------
+# EdgeKV's evaluation is a grid of scenarios; run_sweep evaluates a
+# p_global x contention x rate x groups grid in a single jitted call
+# (scan_backend="pallas" routes the departure scan through the TPU
+# kernel; interpret mode off-TPU).
+from repro.sim import SweepPoint, run_sweep
+
+grid = [SweepPoint(p_global=pg, rate=rate, groups=3)
+        for pg in (0.0, 0.5, 1.0) for rate in (200.0, 400.0)]
+res = run_sweep(grid, duration=2.0, seed=0)
+print(f"swept {len(res)} configs in one jitted program "
+      f"({res.walltime_s:.2f}s):")
+for row in res.rows():
+    print(f"  p_global={row['p_global']:.1f} rate={row['rate']:.0f}: "
+          f"mean {1e3 * row['mean_latency']:.1f} ms, "
+          f"p99 {1e3 * row['p99_latency']:.1f} ms, "
+          f"tput {row['throughput']:.0f} ops/s")

@@ -8,12 +8,17 @@ tiling), ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle):
 * paged_attention — decode attention through the EdgeKV two-tier page
   table (scalar-prefetch gather; the paper's storage module on TPU).
 * ssm_scan — Mamba2/mLSTM chunked SSD with VMEM state carry.
+* maxplus_scan — the EdgeKV simulator's leader-stage departure
+  recurrence as an associative (max, +) scan; the numeric core of the
+  vectorized engine and the batched sweep engine (repro.sim.sweep).
 
 Validated in interpret mode on CPU (tests/test_kernels_*.py); ops.py
 dispatches to the jnp path off-TPU.
 """
 from .flash_attention import flash_attention
+from .maxplus_scan import maxplus_depart
 from .paged_attention import paged_attention
 from .ssm_scan import ssm_scan
 
-__all__ = ["flash_attention", "paged_attention", "ssm_scan"]
+__all__ = ["flash_attention", "maxplus_depart", "paged_attention",
+           "ssm_scan"]

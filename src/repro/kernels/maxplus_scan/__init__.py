@@ -1,0 +1,5 @@
+from .ops import maxplus_depart
+from .kernel import maxplus_depart_kernel
+from .ref import maxplus_depart_ref
+
+__all__ = ["maxplus_depart", "maxplus_depart_kernel", "maxplus_depart_ref"]

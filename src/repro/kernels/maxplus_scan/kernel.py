@@ -1,0 +1,60 @@
+"""Pallas TPU kernel for the batched max-plus departure scan.
+
+Rows are independent sequences (one per (simulation config, group) in a
+sweep); the grid's chunk dimension is *sequential*: a (1, 1) departure
+carry lives in VMEM scratch and is handed chunk to chunk — TPU grid
+iteration is row-major, so ``(r, c)`` runs all chunks of one row
+consecutively and the carry stays private to each row.
+
+Per chunk the recurrence ``d_i = max(a_i, d_{i-1}) + s_i`` unrolls to
+
+    d_i = S_i + max( cummax_j<=i (a_j - S_{j-1}), d_prev )
+
+with ``S`` the inclusive in-chunk cumsum of ``s`` — all row-shaped VPU
+ops (one cumsum, one cummax), no MXU traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mp_kernel(a_ref, s_ref, o_ref, carry_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, -jnp.inf)
+
+    a = a_ref[...]                         # (1, C)
+    s = s_ref[...]                         # (1, C)
+    S = jnp.cumsum(s, axis=1)
+    z = a - (S - s)                        # a_j - exclusive cumsum
+    zc = jax.lax.cummax(z, axis=1)
+    d = S + jnp.maximum(zc, carry_ref[...])   # carry broadcasts (1,1)->(1,C)
+    o_ref[...] = d
+    carry_ref[...] = d[:, -1:]
+
+
+def maxplus_depart_kernel(arrive: jax.Array, svc: jax.Array, *,
+                          chunk: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """arrive/svc: (R, L) with L a multiple of ``chunk``. Returns (R, L)
+    departures. Rows are independent (the carry resets per row)."""
+    R, L = arrive.shape
+    assert L % chunk == 0, (L, chunk)
+    grid = (R, L // chunk)
+    blk = pl.BlockSpec((1, chunk), lambda r, c: (r, c))
+    return pl.pallas_call(
+        functools.partial(_mp_kernel),
+        grid=grid,
+        in_specs=[blk, blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((R, L), arrive.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), arrive.dtype)],
+        interpret=interpret,
+    )(arrive, svc)

@@ -1,0 +1,50 @@
+"""Oracle: sequential max-plus departure recurrence (leader FIFO stage).
+
+The EdgeKV simulator's only true serialization point is each group
+leader's capacity-1 commit stage: op ``i`` starts service when both it has
+arrived *and* the previous op has departed,
+
+    depart_i = max(arrive_i, depart_{i-1}) + svc_i .
+
+This is a max-plus linear recurrence — ``depart = A (x) arrive`` in the
+(max, +) semiring — which is why it admits an associative-scan
+formulation (see ``ops.py``).  This module is the semantic ground truth:
+a plain ``jax.lax.scan`` stepping the recurrence one op at a time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxplus_depart_ref(arrive, svc, reset=None, init=None):
+    """Sequential reference.  ``arrive``/``svc``: (..., L).
+
+    ``reset`` (optional bool, same shape) restarts the recurrence at
+    flagged positions — op ``i`` sees an idle leader, i.e. the scan is
+    segmented.  ``init`` (optional scalar or (...,) array) is the leader's
+    free time before the first op; ``None`` means an idle leader
+    (equivalent to ``-inf``).
+    """
+    arrive = jnp.asarray(arrive)
+    svc = jnp.asarray(svc, arrive.dtype)
+    batch = arrive.shape[:-1]
+    neg = jnp.array(-jnp.inf, arrive.dtype)
+    if init is None:
+        d0 = jnp.full(batch, -jnp.inf, arrive.dtype)
+    else:
+        d0 = jnp.broadcast_to(jnp.asarray(init, arrive.dtype), batch)
+    if reset is None:
+        rs = jnp.zeros(arrive.shape, bool)
+    else:
+        rs = jnp.broadcast_to(jnp.asarray(reset, bool), arrive.shape)
+
+    def step(d_prev, x):
+        a, s, r = x
+        d = jnp.maximum(a, jnp.where(r, neg, d_prev)) + s
+        return d, d
+
+    xs = (jnp.moveaxis(arrive, -1, 0), jnp.moveaxis(svc, -1, 0),
+          jnp.moveaxis(rs, -1, 0))
+    _, out = jax.lax.scan(step, d0, xs)
+    return jnp.moveaxis(out, 0, -1)

@@ -29,9 +29,15 @@ Two execution engines drive the same timing model:
 * ``engine="fast"`` — the vectorized backend in
   :mod:`repro.sim.vectorized`: batched numpy op schedules and delay
   columns, with only the true serialization points (leader commit stage,
-  page-cache sequence) resolved by a per-group scan. Reproduces the oracle
-  trace bit-for-bit on closed-loop runs without churn, and statistically
-  on open-loop/churn runs.
+  page-cache sequence) resolved by a per-group max-plus scan
+  (:mod:`repro.kernels.maxplus_scan`). Reproduces the oracle trace
+  bit-for-bit on closed-loop runs without churn, and statistically on
+  open-loop/churn runs (open loop + churn segments routing at
+  membership events).
+
+For whole parameter grids, :func:`repro.sim.sweep.run_sweep` compiles N
+open-loop fast-engine configurations into one jitted JAX array program
+(each grid point matches ``engine="fast"`` on the same seeds).
 
 Both engines draw their closed-loop op schedules from
 :meth:`YCSBWorkload.batch_ops` with one numpy stream per client thread, so
@@ -57,6 +63,15 @@ from .ycsb import (Op, YCSBWorkload, DTYPE_CODE, DTYPES, KIND_CODE, KINDS,
                    RECORD_BYTES, REQ_BYTES)
 
 ACK_BYTES = 64
+
+
+def arrival_seed(sim_seed: int, gid: str) -> int:
+    """Process-stable open-loop arrival seed: crc32(gid) mixed with the
+    sim seed (``hash(gid)`` is salted per process, which broke replay).
+    Module-level so the sweep engine draws identical streams without a
+    :class:`SimEdgeKV` instance."""
+    return zlib.crc32(gid.encode()) ^ ((sim_seed + 1) * 0x9E3779B9
+                                       & 0xFFFFFFFF)
 
 
 @dataclass
@@ -437,13 +452,7 @@ class SimEdgeKV:
         self.env.run()
 
     def _arrival_seed(self, gid: str) -> int:
-        """Process-stable arrival seed: crc32(gid) mixed with the sim seed.
-
-        ``hash(gid)`` is salted per process (PYTHONHASHSEED), which broke
-        the engine's 'deterministic given seeds' contract for open-loop
-        runs."""
-        return zlib.crc32(gid.encode()) ^ ((self.seed + 1) * 0x9E3779B9
-                                           & 0xFFFFFFFF)
+        return arrival_seed(self.seed, gid)
 
     def _arrivals(self, gid: str, wl: YCSBWorkload, rate: float,
                   duration: float) -> Generator:
@@ -457,6 +466,12 @@ class SimEdgeKV:
     def mean_latency(self, kind: Optional[str] = None,
                      dtype: Optional[str] = None) -> float:
         return self.records.mean_latency(kind, dtype)
+
+    def tail_latency(self, q: float, kind: Optional[str] = None,
+                     dtype: Optional[str] = None) -> float:
+        """``q``-th percentile latency over the selected records (p95/p99
+        at fig scale costs one ``np.percentile`` on the SoA buffer)."""
+        return self.records.tail_latency(q, kind, dtype)
 
     def throughput(self) -> float:
         """Paper metric: average of per-client throughputs (§5.4.2).

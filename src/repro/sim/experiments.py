@@ -122,18 +122,58 @@ def fig11_12_clients_global(client_counts=(100, 500, 1000, 2000),
 def fig13_request_rate(rates=(100, 200, 400, 800), duration: float = 20.0,
                        service: Optional[ServiceParams] = None,
                        engine: str = "fast") -> List[dict]:
-    """Open-loop latency vs request rate at 50% global, 100 threads-worth."""
+    """Open-loop latency vs request rate at 50% global, 100 threads-worth.
+
+    Sweep-shaped: with ``engine="fast"`` the whole rate axis of one
+    setting evaluates as a single batched array program
+    (:func:`repro.sim.sweep.run_sweep`), each point identical to an
+    individual fast-engine run on the same seeds.
+    """
     rows = []
     for setting in ("edge", "cloud"):
-        for rate in rates:
-            sim = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
-                            service=service, engine=engine)
-            sim.run_open_loop(rate_per_client=rate, duration=duration,
-                              workload_kw=dict(p_global=0.5))
-            rows.append(dict(
-                setting=setting, rate=rate,
-                latency_ms=1e3 * sim.mean_latency(),
-            ))
+        if engine == "fast":
+            from .sweep import SweepPoint, run_sweep
+            res = run_sweep(
+                [SweepPoint(p_global=0.5, rate=float(r), groups=3)
+                 for r in rates],
+                duration=duration, setting=setting, service=service)
+            for rate, r in zip(rates, res.rows()):
+                rows.append(dict(
+                    setting=setting, rate=rate,
+                    latency_ms=1e3 * r["mean_latency"],
+                    p95_ms=1e3 * r["p95_latency"],
+                    p99_ms=1e3 * r["p99_latency"],
+                ))
+        else:
+            for rate in rates:
+                sim = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
+                                service=service, engine=engine)
+                sim.run_open_loop(rate_per_client=rate, duration=duration,
+                                  workload_kw=dict(p_global=0.5))
+                rows.append(dict(
+                    setting=setting, rate=rate,
+                    latency_ms=1e3 * sim.mean_latency(),
+                    p95_ms=1e3 * sim.tail_latency(95),
+                    p99_ms=1e3 * sim.tail_latency(99),
+                ))
+    return rows
+
+
+# ------------------------------------------------------------- fig sweep
+def fig_sweep(duration: float = 2.0, seed: int = 0,
+              service: Optional[ServiceParams] = None,
+              scan_backend: str = "assoc") -> List[dict]:
+    """Beyond-paper scenario grid (PR 3): the §6 evaluation space —
+    p_global x contention (keyspace) x rate x group count, 64 points —
+    evaluated as ONE jitted array program via
+    :func:`repro.sim.sweep.run_sweep`.  Returns one row per grid point
+    with config, mean/kind latencies, throughput, and p95/p99 tails."""
+    from .sweep import run_sweep, sweep_grid
+    res = run_sweep(sweep_grid(), duration=duration, seed=seed,
+                    service=service, scan_backend=scan_backend)
+    rows = res.rows()
+    for r in rows:
+        r["walltime_s"] = res.walltime_s
     return rows
 
 
@@ -207,6 +247,8 @@ def fig_scale(groups: int = 100, clients_per_group: int = 100,
         read_latency_ms=1e3 * sim.mean_latency(kind="read"),
         global_write_latency_ms=1e3 * sim.mean_latency(
             kind="update", dtype="global"),
+        p95_latency_ms=1e3 * sim.tail_latency(95),
+        p99_latency_ms=1e3 * sim.tail_latency(99),
         throughput_ops=sim.throughput(),
         mean_hops=float(sim.records.columns()["hops"].mean()),
         walltime_s=wall,

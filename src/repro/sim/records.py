@@ -47,6 +47,8 @@ class RecordArray:
         self._group_code: Dict[str, int] = {}     # gid -> code
         self._arrays: Optional[dict] = None       # cached numpy columns
         self._stats: Optional[Dict[str, Tuple[int, float, float]]] = None
+        # cached per-group tail latencies, keyed by the percentile tuple
+        self._tails: Dict[Tuple[float, ...], Dict[str, Tuple[float, ...]]] = {}
 
     # ------------------------------------------------------------ groups
     def register_group(self, gid: str) -> int:
@@ -76,6 +78,7 @@ class RecordArray:
         t["hops"].append(hops)
         self._len += 1
         self._arrays = self._stats = None
+        self._tails = {}
 
     def _flush_tail(self) -> None:
         if self._tail["latency"]:
@@ -97,6 +100,7 @@ class RecordArray:
                                                dtype, group, hops))))
         self._len += len(latency)
         self._arrays = self._stats = None
+        self._tails = {}
 
     # ------------------------------------------------------------ columns
     def columns(self) -> dict:
@@ -132,9 +136,49 @@ class RecordArray:
         n = int(sel.sum())
         return float(cols["latency"][sel].sum() / n) if n else float("nan")
 
-    def group_stats(self) -> Dict[str, Tuple[int, float, float]]:
+    def tail_latency(self, q: float, kind: Optional[str] = None,
+                     dtype: Optional[str] = None) -> float:
+        """``q``-th percentile latency (e.g. 95, 99) over the selected
+        records — one ``np.percentile`` on the cached column view."""
+        cols = self.columns()
+        sel = np.ones(len(self), dtype=bool)
+        if kind is not None:
+            sel &= cols["kind"] == KINDS.index(kind)
+        if dtype is not None:
+            sel &= cols["dtype"] == DTYPES.index(dtype)
+        lat = cols["latency"][sel]
+        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+
+    def group_tails(self, percentiles: Tuple[float, ...] = (95.0, 99.0)
+                    ) -> Dict[str, Tuple[float, ...]]:
+        """Per-group tail latencies in ONE sort-partitioned pass over the
+        buffer (cached until the next append): ``{gid: (p_q0, p_q1, ...)}``
+        for the requested percentiles."""
+        key = tuple(float(q) for q in percentiles)
+        tails = self._tails.get(key)
+        if tails is None:
+            cols = self.columns()
+            g = cols["group"]
+            order = np.argsort(g, kind="stable")
+            gs = g[order]
+            lat = cols["latency"][order]
+            bounds = np.searchsorted(gs, np.arange(len(self._group_ids) + 1))
+            tails = self._tails[key] = {
+                self._group_ids[c]: tuple(
+                    float(v) for v in np.percentile(
+                        lat[bounds[c]:bounds[c + 1]], key))
+                for c in range(len(self._group_ids))
+                if bounds[c + 1] > bounds[c]
+            }
+        return tails
+
+    def group_stats(self, percentiles: Optional[Tuple[float, ...]] = None
+                    ) -> Dict[str, tuple]:
         """Per-group ``(count, first_start, last_end)`` in ONE vectorized
-        pass over the buffer (cached until the next append)."""
+        pass over the buffer (cached until the next append).  With
+        ``percentiles`` given, each tuple is extended with the group's
+        tail latencies, e.g. ``percentiles=(95, 99)`` yields
+        ``(count, first_start, last_end, p95, p99)``."""
         if self._stats is None:
             cols = self.columns()
             g = cols["group"]
@@ -149,7 +193,11 @@ class RecordArray:
                                      float(last[c]))
                 for c in range(ngroups) if counts[c]
             }
-        return self._stats
+        if percentiles is None:
+            return self._stats
+        tails = self.group_tails(tuple(percentiles))
+        return {gid: stat + tails[gid]
+                for gid, stat in self._stats.items()}
 
     # ----------------------------------------------------- list-compat API
     def __len__(self) -> int:

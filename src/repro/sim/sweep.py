@@ -1,0 +1,406 @@
+"""Batched parameter sweeps: N EdgeKV open-loop simulations as ONE jitted
+JAX array program.
+
+EdgeKV's evaluation (§6) is a grid of scenarios — workload mix x
+local/global ratio x load x topology — and with the fast engine each grid
+point still costs a separate numpy pass.  This module compiles the whole
+grid instead: :func:`run_sweep` takes a list of :class:`SweepPoint`
+configurations and evaluates them in a single ``jax.jit`` call.
+
+Layout: the grid is flattened to **one row per (config, serving group)**
+— the granularity at which the leader FIFO serializes — with ops in
+leader-arrival order and ragged tails padded.  That row axis is both the
+``vmap`` axis for the pure delay-column chains shared with the per-run
+engine (:func:`repro.sim.vectorized.arrival_chain` /
+:func:`~repro.sim.vectorized.completion_chain`, evaluated from stacked
+per-config component tables) and the batch axis of the max-plus
+departure scan from :mod:`repro.kernels.maxplus_scan`
+(``jax.lax.associative_scan`` by default, the Pallas kernel with
+``scan_backend="pallas"``), so the program needs no in-program
+gather/scatter at all.  Per-row masked category reductions come back as
+batched aggregates; :class:`SweepResult` folds them into per-point
+columns — mean latencies by kind/dtype, paper-metric throughput,
+p95/p99 tails — the :class:`~repro.sim.records.RecordArray` aggregate
+shape lifted to a whole grid.
+
+Only the parts that are inherently host-side stay in numpy: drawing the
+op schedules (the numpy RNG streams must match the fast engine draw for
+draw), Chord routing (one shared ring per group count, one ``route`` per
+(gateway, successor-vnode) class for the *whole grid*), and the exact
+LRU page-penalty masks (:func:`~repro.sim.vectorized.lru_hit_mask`).
+
+Exactness: every per-point result matches an independent
+``SimEdgeKV(engine="fast")`` run on the same seeds to ~1e-13 relative —
+the array program evaluates the identical float64 expressions; only the
+scan/reduction association order differs.  The jitted call runs under
+``jax.experimental.enable_x64`` so float64 survives jax.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass
+from functools import lru_cache
+from itertools import product
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.hashring import ChordRing, stable_hash
+from repro.kernels.maxplus_scan import maxplus_depart
+
+from .cluster import ServiceParams, arrival_seed
+from .network import SETTINGS
+from .vectorized import (GLOBAL_CODE, READ_CODE, _DelayModel,
+                         _open_loop_segments, arrival_chain,
+                         completion_chain, lru_hit_mask)
+
+_PAIRS = ("c_req", "c_resp", "f_req", "f_resp", "sg_req", "sg_resp",
+          "h_req", "g_resp", "svc_base")
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    """One open-loop configuration in a sweep grid."""
+    p_global: float = 0.5
+    rate: float = 200.0
+    groups: int = 3
+    n_records: int = 10_000
+    distribution: str = "uniform"
+    group_size: int = 3
+
+
+def sweep_grid(p_globals: Sequence[float] = (0.0, 0.25, 0.5, 0.75),
+               rates: Sequence[float] = (200.0, 400.0, 600.0, 800.0),
+               contention: Sequence[int] = (10_000, 2_500),
+               groups: Sequence[int] = (3, 5),
+               distribution: str = "uniform",
+               group_size: int = 3) -> List[SweepPoint]:
+    """The §6-style evaluation grid: local/global ratio x contention
+    (keyspace size — fewer records, hotter pages) x arrival rate (the
+    Fig 13 axis) x group count.  Defaults to 4 x 2 x 4 x 2 = 64 points.
+    """
+    return [SweepPoint(p_global=pg, rate=float(r), n_records=int(nr),
+                       groups=int(g), distribution=distribution,
+                       group_size=group_size)
+            for pg, nr, r, g in product(p_globals, contention, rates,
+                                        groups)]
+
+
+@dataclass
+class SweepResult:
+    """Batched sweep aggregates — one SoA column per metric, one slot per
+    grid point (the :class:`~repro.sim.records.RecordArray` aggregate
+    shape, lifted to a whole grid)."""
+    points: List[SweepPoint]
+    columns: Dict[str, np.ndarray]
+    walltime_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def row(self, i: int) -> dict:
+        r = dict(asdict(self.points[i]))
+        r.update({k: float(v[i]) for k, v in self.columns.items()})
+        return r
+
+    def rows(self) -> List[dict]:
+        return [self.row(i) for i in range(len(self))]
+
+
+_KEYSPACE_HASHES: Dict[int, np.ndarray] = {}
+
+
+def _keyspace_hashes(keys: List[str]) -> np.ndarray:
+    """Ring hashes for a whole YCSB keyspace, memoized by size (the key
+    strings are deterministic) — one sha1 pass per keyspace for the whole
+    grid instead of one per point."""
+    kh = _KEYSPACE_HASHES.get(len(keys))
+    if kh is None:
+        kh = _KEYSPACE_HASHES[len(keys)] = np.fromiter(
+            (stable_hash(k) for k in keys), dtype=np.uint64,
+            count=len(keys))
+    return kh
+
+
+class _Topology:
+    """Shared Chord topology for every sweep point with the same group
+    count: the ring depends only on the gateway names, so construction,
+    key -> successor-vnode maps, and route classes amortize across the
+    grid (one ``ring.route`` per (gateway, successor-vnode) class for the
+    whole sweep)."""
+
+    def __init__(self, groups: int, virtual_nodes: int = 1):
+        self.ring = ChordRing(virtual_nodes=virtual_nodes)
+        self.gw_of_code = [f"gw{i}" for i in range(groups)]
+        for gw in self.gw_of_code:
+            self.ring.add_node(gw)
+        self._vh = np.asarray(self.ring._vhashes, dtype=np.uint64)
+        self._svn: Dict[int, np.ndarray] = {}    # keyspace -> vnode of key
+        self._cls: Dict[int, Tuple[int, int]] = {}  # class -> (owner, hops)
+
+    def routes(self, client_codes: np.ndarray, key_indices: np.ndarray,
+               keys: List[str]) -> Tuple[np.ndarray, np.ndarray]:
+        svn_of_key = self._svn.get(len(keys))
+        if svn_of_key is None:
+            svn_of_key = self._svn[len(keys)] = (
+                np.searchsorted(self._vh, _keyspace_hashes(keys),
+                                side="left") % len(self._vh)
+            ).astype(np.int64)
+        svn = svn_of_key[key_indices]
+        packed = client_codes.astype(np.int64) * len(self._vh) + svn
+        uniq, uidx, inv = np.unique(packed, return_index=True,
+                                    return_inverse=True)
+        owner_u = np.empty(len(uniq), np.int32)
+        hops_u = np.empty(len(uniq), np.int32)
+        for j, u in enumerate(uniq.tolist()):
+            ent = self._cls.get(u)
+            if ent is None:
+                rep = int(uidx[j])
+                path = self.ring.route(
+                    self.gw_of_code[int(client_codes[rep])],
+                    keys[int(key_indices[rep])])
+                ent = self._cls[u] = (
+                    int(path[-1][2:]), len(path) - 1)  # "gw<i>" -> code
+            owner_u[j], hops_u[j] = ent
+        return owner_u[inv], hops_u[inv]
+
+
+@lru_cache(maxsize=None)
+def _compiled(max_hops: int, scan_backend: str, interpret: bool):
+    """Build + jit the grid program for one static shape family.
+
+    Everything is row-space (R, Ls): one row per (config, serving group),
+    ops in leader-arrival order, padded tails masked by ``valid``.
+    """
+
+    def row_chain(tblr, t0, is_w, glob, lf, hops, pens):
+        """Per-row arrival/service delay columns from the config's
+        stacked component table — vmapped over the row axis."""
+        def pick(name):
+            return jnp.where(is_w, tblr[name][1], tblr[name][0])
+        arr = arrival_chain(jnp, t0, pick("c_req"), pick("f_req"),
+                            pick("sg_req"), pick("h_req"), lf, glob, hops,
+                            max_hops)
+        svc = pick("svc_base") + pens
+        return arr, svc
+
+    def row_completion(tblr, dep, is_w, glob, lf, remote):
+        def pick(name):
+            return jnp.where(is_w, tblr[name][1], tblr[name][0])
+        q_or_ri = jnp.where(is_w, tblr["q_ri"][1], tblr["q_ri"][0])
+        return completion_chain(jnp, dep, q_or_ri, pick("sg_resp"),
+                                pick("g_resp"), pick("f_resp"),
+                                pick("c_resp"), lf, glob, remote)
+
+    def program(tblr, flat, gidx):
+        # row-space views: one gather per op column (padding index points
+        # at the zeroed pad slot appended to each flat column)
+        def take(name):
+            return jnp.take(flat[name], gidx, mode="clip")
+        t0, is_w, glob = take("t0"), take("is_w"), take("glob")
+        lf, remote = take("lf"), take("remote")
+        valid = gidx < flat["t0"].shape[0] - 1
+        arr, svc = jax.vmap(row_chain)(
+            tblr, t0, is_w, glob, lf, take("hops"), take("pens"))
+
+        # the leader FIFO stage: batched max-plus departure scan, one
+        # independent recurrence per row (padding tails carry harmlessly)
+        if scan_backend == "pallas":
+            dep = maxplus_depart(arr, svc, backend="pallas",
+                                 interpret=interpret)
+        else:
+            dep = maxplus_depart(arr, svc, backend="assoc")
+
+        comp = jax.vmap(row_completion)(tblr, dep, is_w, glob, lf, remote)
+        lat = comp - t0
+
+        # per-row aggregates over (is_write x is_global) categories; the
+        # host folds rows into per-point kind/dtype means
+        cnt4, sum4 = [], []
+        for m in (valid & ~is_w & ~glob, valid & ~is_w & glob,
+                  valid & is_w & ~glob, valid & is_w & glob):
+            cnt4.append(jnp.sum(m, axis=1))
+            sum4.append(jnp.sum(jnp.where(m, lat, 0.0), axis=1))
+        return jnp.stack(cnt4, axis=1), jnp.stack(sum4, axis=1), lat
+
+    return jax.jit(program)
+
+
+def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
+              setting: str = "edge", seed: int = 0,
+              service: Optional[ServiceParams] = None,
+              virtual_nodes: int = 1, scan_backend: str = "assoc",
+              interpret: Optional[bool] = None,
+              percentiles: Sequence[float] = (95.0, 99.0)) -> SweepResult:
+    """Evaluate an open-loop sweep grid in a single jitted array program.
+
+    Each :class:`SweepPoint` reproduces exactly what
+    ``SimEdgeKV(setting=setting, group_sizes=(group_size,)*groups,
+    seed=seed, engine="fast").run_open_loop(rate, duration, workload_kw)``
+    would record — same schedules, routes, penalties, and float64 delay
+    arithmetic — but the grid shares one compiled program, one ring per
+    group count, and one batched departure scan.  ``scan_backend``
+    selects the leader-stage scan: ``"assoc"``
+    (``jax.lax.associative_scan``) or ``"pallas"`` (the TPU kernel;
+    interpret mode off-TPU).
+    """
+    points = [points] if isinstance(points, SweepPoint) else list(points)
+    if not points:
+        raise ValueError("empty sweep grid")
+    if duration <= 0:
+        raise ValueError("duration must be positive")
+    t_wall = time.perf_counter()
+    svcp = service or ServiceParams()
+    dm = _DelayModel(SETTINGS[setting], svcp)
+    capacity = max(1, svcp.page_cache_keys)
+    qs = tuple(float(q) for q in percentiles)
+
+    # ---- host side: schedules, routes, penalties (seed-exact numpy) ----
+    topos: Dict[int, _Topology] = {}
+    cols_op: Dict[str, List[np.ndarray]] = {
+        k: [] for k in ("t0", "pens", "is_w", "glob", "lf", "remote",
+                        "hops", "client")}
+    per: List[dict] = []       # per-point metadata
+    row_idx: List[np.ndarray] = []   # per row: global op indices
+    row_tbl: List[int] = []          # per row: owning point
+    offset = 0
+    for pi, p in enumerate(points):
+        topo = topos.get(p.groups)
+        if topo is None:
+            topo = topos[p.groups] = _Topology(p.groups, virtual_nodes)
+        clients = [(c, c, p.group_size, arrival_seed(seed, f"g{c}"))
+                   for c in range(p.groups)]
+        segs = _open_loop_segments(
+            clients, p.rate, duration, 0.0,
+            dict(p_global=p.p_global, distribution=p.distribution,
+                 n_records=p.n_records))
+        keys = segs[0][1].keys
+        client = np.concatenate([np.full(len(s[2]), s[0], np.int32)
+                                 for s in segs])
+        t0 = np.concatenate([s[2] for s in segs])
+        key_idx = np.concatenate([s[3] for s in segs])
+        kind = np.concatenate([s[4] for s in segs])
+        dtype = np.concatenate([s[5] for s in segs])
+        fwd = np.concatenate([s[6] for s in segs])
+        is_w = kind != READ_CODE
+        glob = dtype == GLOBAL_CODE
+        serving = client.copy()
+        hops = np.zeros(len(t0), np.int32)
+        if glob.any():
+            owner, h = topo.routes(client[glob], key_idx[glob], keys)
+            serving[glob] = owner
+            hops[glob] = h
+
+        def bw(pair):
+            return np.where(is_w, pair[1], pair[0])
+        lf = (~glob) & fwd
+        # host copy of the arrival chain, only to fix the per-group scan
+        # order and LRU replay order (the program re-derives the values)
+        arr = arrival_chain(np, t0, bw(dm.c_req), bw(dm.f_req),
+                            bw(dm.sg_req), bw(dm.h_req), lf, glob, hops,
+                            int(hops.max()) if len(hops) else 0)
+        pens = np.zeros(len(t0))
+        # one lexsort per point: (serving, arrival, index) makes every
+        # serving group a contiguous, arrival-ordered slice — the same
+        # per-group order the fast engine scans in
+        order_all = np.lexsort((np.arange(len(t0)), arr, serving))
+        sv = serving[order_all]
+        cuts = np.flatnonzero(sv[1:] != sv[:-1]) + 1
+        for order in np.split(order_all, cuts):
+            hit = lru_hit_mask(key_idx[order], capacity)
+            pens[order] = np.where(hit, 0.0, dm.seek)
+            row_idx.append(offset + order)
+            row_tbl.append(pi)
+        for name, col in (("t0", t0), ("pens", pens), ("is_w", is_w),
+                          ("glob", glob), ("lf", lf),
+                          ("remote", glob & (serving != client)),
+                          ("hops", hops), ("client", client)):
+            cols_op[name].append(col)
+        per.append(dict(n=len(t0), offset=offset,
+                        seg_len=[len(s[2]) for s in segs],
+                        q_ri=(dm.readindex(p.group_size),
+                              dm.quorum(p.group_size))))
+        offset += len(t0)
+
+    n_total = offset
+    # one extra zeroed slot per column backs the row padding
+    flat = {k: np.concatenate(v + [np.zeros(1, v[0].dtype)])
+            for k, v in cols_op.items()}
+
+    # ---- row-space index: (R, Ls) with padded ragged tails ----
+    R = len(row_idx)
+    Ls = max(len(r) for r in row_idx)
+    gidx = np.full((R, Ls), n_total, np.int32)
+    for r, idx in enumerate(row_idx):
+        gidx[r, :len(idx)] = idx
+    valid = gidx < n_total
+    tbl_pt = {name: np.tile(np.asarray(getattr(dm, name), np.float64),
+                            (len(points), 1))
+              for name in _PAIRS}
+    tbl_pt["q_ri"] = np.asarray([d["q_ri"] for d in per], np.float64)
+    row_tbl_arr = np.asarray(row_tbl)
+    tblr = {name: v[row_tbl_arr] for name, v in tbl_pt.items()}
+    max_hops = int(flat["hops"].max()) if n_total else 0
+
+    # ---- the single jitted call ----
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = _compiled(max_hops, scan_backend, bool(interpret))
+    with enable_x64():
+        cnt4, sum4, lat_rows = jax.device_get(fn(
+            {k: jnp.asarray(v) for k, v in tblr.items()},
+            {k: jnp.asarray(v) for k, v in flat.items()
+             if k != "client"},
+            jnp.asarray(gidx)))
+
+    # ---- fold rows back into per-point RecordArray-style aggregates ----
+    lat_op = np.empty(n_total)
+    lat_op[gidx[valid]] = np.asarray(lat_rows)[valid]
+    cnt4 = np.asarray(cnt4, np.float64)
+    sum4 = np.asarray(sum4)
+    N = len(points)
+    cnt_pt = np.zeros((N, 4))
+    sum_pt = np.zeros((N, 4))
+    for c in range(4):
+        cnt_pt[:, c] = np.bincount(row_tbl_arr, cnt4[:, c], minlength=N)
+        sum_pt[:, c] = np.bincount(row_tbl_arr, sum4[:, c], minlength=N)
+
+    # categories: (read-local, read-global, update-local, update-global)
+    sel = {"mean_latency": (0, 1, 2, 3), "read_latency": (0, 1),
+           "update_latency": (2, 3), "local_latency": (0, 2),
+           "global_latency": (1, 3), "update_global_latency": (3,)}
+    cols: Dict[str, np.ndarray] = {
+        "ops": np.asarray([d["n"] for d in per], np.int64)}
+    for name, cats in sel.items():
+        c = cnt_pt[:, list(cats)].sum(axis=1)
+        s = sum_pt[:, list(cats)].sum(axis=1)
+        cols[name] = np.where(c > 0, s / np.maximum(c, 1), np.nan)
+
+    # paper-metric throughput (average of per-client rates) and tails,
+    # from the op-order latency column — same expressions as
+    # RecordArray.group_stats / tail_latency
+    thr = np.zeros(N)
+    tails = np.zeros((len(qs), N))
+    for pi, d in enumerate(per):
+        lo, n = d["offset"], d["n"]
+        lat_pt = lat_op[lo:lo + n]
+        t0_pt = flat["t0"][lo:lo + n]
+        end_pt = t0_pt + lat_pt
+        rates = []
+        s = lo
+        for ln in d["seg_len"]:
+            span = (end_pt[s - lo:s - lo + ln].max()
+                    - t0_pt[s - lo:s - lo + ln].min())
+            if span > 0:
+                rates.append(ln / span)
+            s += ln
+        thr[pi] = sum(rates) / len(rates) if rates else 0.0
+        if qs:
+            tails[:, pi] = np.percentile(lat_pt, qs)
+    cols["throughput"] = thr
+    for q, t in zip(qs, tails):
+        cols[f"p{q:g}_latency"] = t
+    return SweepResult(points, cols, time.perf_counter() - t_wall)

@@ -30,9 +30,15 @@ The only true serialization points are
 
 For **open-loop** runs arrivals are exogenous (Poisson), so both resolve
 in one per-group O(ops) pass: sort by arrival, replay the LRU once for the
-penalties, then ``departure = cumsum(svc) + cummax(arrival - exclusive
-cumsum(svc))`` — an associative max-plus scan, directly expressible as a
-``jax.lax.scan`` (or ``associative_scan``) for a kernels-flavored path.
+penalties, then the max-plus departure scan ``dep_i = max(arr_i,
+dep_{i-1}) + svc_i`` through :mod:`repro.kernels.maxplus_scan` (numpy
+closed form here; the same recurrence as ``jax.lax.associative_scan`` /
+a Pallas kernel powers the batched sweep engine in
+:mod:`repro.sim.sweep`, which evaluates whole parameter grids as one
+jitted array program built from the pure :func:`arrival_chain` /
+:func:`completion_chain` delay columns below).  Open loop + churn runs
+in the same pass: routing and write application are segmented at
+membership events, the scan is not (the leader queue persists).
 For **closed-loop** runs the next arrival of a thread depends on its
 previous completion, so the same recurrence is evaluated online: a heap
 holds exactly ONE event per op (its leader arrival) instead of ~10, and
@@ -61,6 +67,7 @@ import numpy as np
 
 from repro.core.hashring import stable_hash
 from repro.core.kvstore import GLOBAL, LOCAL
+from repro.kernels.maxplus_scan import maxplus_depart
 
 from .cluster import ACK_BYTES, SimEdgeKV, ThreadPlan
 from .events import Timeout
@@ -88,8 +95,7 @@ class _DelayModel:
     float accumulation.
     """
 
-    def __init__(self, sim: SimEdgeKV):
-        net, svc = sim.net, sim.service
+    def __init__(self, net, svc):
         req = (REQ_BYTES, REQ_BYTES + RECORD_BYTES)          # [is_write]
         resp = (REQ_BYTES + RECORD_BYTES, REQ_BYTES)
         self.c_req = tuple(net.xfer("cli_st", b) for b in req)
@@ -129,7 +135,8 @@ class _DelayModel:
         return r
 
 
-def _batch_routes(sim: SimEdgeKV, gw_of_code: List[str],
+def _batch_routes(ring, gw_of_code: List[str],
+                  owner_code_of_gw: Dict[str, int],
                   client_codes: np.ndarray, key_indices: np.ndarray,
                   keys: List[str]) -> Tuple[np.ndarray, np.ndarray]:
     """(owner_code, hops) for each (client group code, key index) row.
@@ -137,8 +144,10 @@ def _batch_routes(sim: SimEdgeKV, gw_of_code: List[str],
     One ``ring.route`` call per unique (gateway, successor-vnode) class —
     a Chord lookup path depends on the target only through its successor
     vnode, so a representative key per class routes for all of them.
+    Takes the ring topology explicitly (not a sim); the sweep engine's
+    :class:`repro.sim.sweep._Topology` is the grid-memoized variant of
+    this (keyspace hashes and route classes cached across points).
     """
-    ring = sim.ring
     vh = np.asarray(ring._vhashes, dtype=np.uint64)
     uk = np.unique(key_indices)
     khash = np.fromiter((stable_hash(keys[int(k)]) for k in uk),
@@ -152,12 +161,11 @@ def _batch_routes(sim: SimEdgeKV, gw_of_code: List[str],
                                 return_inverse=True)
     owner_u = np.empty(len(uniq), np.int32)
     hops_u = np.empty(len(uniq), np.int32)
-    gcode = sim.records.group_code
     for j in range(len(uniq)):
         rep = int(uidx[j])
         path = ring.route(gw_of_code[int(client_codes[rep])],
                           keys[int(key_indices[rep])])
-        owner_u[j] = gcode(sim.group_of_gateway[path[-1]])
+        owner_u[j] = owner_code_of_gw[path[-1]]
         hops_u[j] = len(path) - 1
     return owner_u[inv], hops_u[inv]
 
@@ -167,7 +175,7 @@ class _FastEngine:
 
     def __init__(self, sim: SimEdgeKV):
         self.sim = sim
-        self.dm = _DelayModel(sim)
+        self.dm = _DelayModel(sim.net, sim.service)
         self._profiles: Dict[tuple, tuple] = {}
         # per-group-code tables (grown by _sync_groups on membership events)
         self.gid_of: List[str] = []
@@ -315,7 +323,10 @@ class _FastEngine:
         serving = self.client_code.copy()
         hops = np.zeros(self.n_ops, dtype=np.int32)
         if globals_too and glob.any():
-            owner, h = _batch_routes(self.sim, self.gw_of,
+            sim = self.sim
+            owner_code = {gw: sim.records._group_code[g]
+                          for g, gw in sim.gateway_of_group.items()}
+            owner, h = _batch_routes(sim.ring, self.gw_of, owner_code,
                                      self.client_code[glob],
                                      self.key_idx[glob], plan[0].wl.keys)
             serving[glob] = owner
@@ -549,33 +560,56 @@ def run_closed_loop_fast(sim: SimEdgeKV, plan: List[ThreadPlan]) -> None:
     eng.run()
 
 
-# --------------------------------------------------------------- open loop
-def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
-                       workload_kw: dict) -> None:
-    """Fully batched open-loop run (Fig 13): exogenous Poisson arrivals
-    mean there is no closed-loop feedback, so the leader stage resolves in
-    one per-group pass — LRU replay for penalties, then the max-plus scan
-    ``dep = cumsum(svc) + cummax(arr - exclusive_cumsum(svc))`` (the
-    ``lax.scan``-shaped recurrence; numpy's ``maximum.accumulate`` here).
-    """
-    if sim.env.pending:
-        raise NotImplementedError(
-            "fast open-loop runs do not support auxiliary processes; "
-            "use engine='oracle' for churn + open loop")
-    dm = _DelayModel(sim)
-    gcode = sim.records.group_code
-    ids = sim.records._group_ids
+# --------------------------------------------------- pure delay columns
+def arrival_chain(xp, t0, c_req, f_req, sg_req, h_req, lf, glob, hops,
+                  max_hops: int):
+    """Leader-arrival times from per-op delay-component columns.
 
+    Masked sequential adds in the oracle's Timeout term order (float
+    addition is not associative, so the order is part of the exactness
+    contract).  Pure in ``xp`` — numpy for the per-run fast engine,
+    jax.numpy inside the jitted sweep program — so both paths evaluate
+    bitwise the same float64 expression.
+    """
+    arr = t0 + c_req
+    arr = xp.where(lf, arr + f_req, arr)
+    arr = xp.where(glob, arr + sg_req, arr)
+    for k in range(max_hops):
+        arr = xp.where(hops > k, arr + h_req, arr)
+    arr = xp.where(glob, arr + sg_req, arr)
+    return arr
+
+
+def completion_chain(xp, dep, q_or_ri, sg_resp, g_resp, f_resp, c_resp,
+                     lf, glob, remote):
+    """Completion times from leader departures: quorum/ReadIndex round,
+    then the response hop chain (same masked-sequential-add contract as
+    :func:`arrival_chain`)."""
+    comp = dep + q_or_ri
+    comp = xp.where(glob, comp + sg_resp, comp)
+    comp = xp.where(remote, comp + g_resp, comp)
+    comp = xp.where(glob, comp + sg_resp, comp)
+    comp = xp.where(lf, comp + f_resp, comp)
+    comp = comp + c_resp
+    return comp
+
+
+# ----------------------------------------------------- open-loop pieces
+def _open_loop_segments(clients, rate: float, duration: float, now: float,
+                        workload_kw: dict) -> List[tuple]:
+    """Per-client-group open-loop op schedules, identical draws for the
+    fast engine and the sweep engine.
+
+    ``clients`` rows are ``(group_code, gi, n, arrival_seed)``; returns
+    ``(code, workload, t0, key_idx, kind, dtype, fwd)`` per group.
+    """
     segs = []
-    for gi, gid in enumerate(list(sim.groups)):
-        if sim.groups[gid]["retired"]:
-            continue
+    for code, gi, n, aseed in clients:
         wl = YCSBWorkload(seed=2000 + gi, **workload_kw)
-        sim.client_groups.add(gid)
         if duration <= 0:
             continue
         rng = np.random.default_rng(np.random.SeedSequence(
-            [(2000 + gi) & 0xFFFFFFFF, sim._arrival_seed(gid)]))
+            [(2000 + gi) & 0xFFFFFFFF, aseed]))
         # arrival k fires iff arrival k-1 lands before t_end (oracle's
         # while-loop semantics), so one arrival may overshoot duration
         t = np.empty(0)
@@ -584,33 +618,230 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
             e = rng.exponential(1.0 / rate, size=chunk)
             t = np.concatenate([t, (t[-1] if t.size else 0.0) + np.cumsum(e)])
         count = int(np.searchsorted(t, duration, side="left")) + 1
-        t0 = t[:count] + sim.env.now  # arrivals start at current virtual time
+        t0 = t[:count] + now  # arrivals start at current virtual time
         key_idx, kind, dtype = wl.batch_ops(count, rng)
-        n = sim.groups[gid]["n"]
         fwd = ((dtype == LOCAL_CODE)
                & (rng.random(count) < (n - 1) / n))
-        segs.append((gcode(gid), wl, t0, key_idx, kind, dtype, fwd))
-    if not segs:
+        segs.append((code, wl, t0, key_idx, kind, dtype, fwd))
+    return segs
+
+
+def lru_hit_mask(key_seq: np.ndarray, capacity: int) -> np.ndarray:
+    """Exact LRU hit/miss mask for an access sequence, without replaying
+    the cache dict op by op.
+
+    ``hit[i]`` iff ``key_seq[i]`` is resident in an LRU cache of
+    ``capacity`` at access ``i`` (get-then-put semantics, as in
+    :class:`repro.core.cache.LRUCache`).  Classic LRU inclusion property:
+    a re-access hits iff its stack distance — distinct keys touched since
+    the previous access of the same key, counting itself — is at most the
+    capacity.  When the whole sequence touches <= capacity distinct keys
+    (the common sweep-grid case) no eviction can ever occur and the mask
+    is simply "seen before" (pure numpy); otherwise stack distances come
+    from one Fenwick pass over last-occurrence flags.
+    """
+    n = len(key_seq)
+    if n == 0:
+        return np.zeros(0, bool)
+    order = np.argsort(key_seq, kind="stable")
+    ks = key_seq[order]
+    same = ks[1:] == ks[:-1]
+    prev = np.full(n, -1, np.int64)
+    prev[order[1:][same]] = order[:-1][same]
+    first = prev < 0
+    if int(first.sum()) <= capacity:
+        return ~first
+
+    tree = [0] * (n + 1)  # Fenwick over positions; 1 = last occurrence so far
+
+    def add(i: int, v: int) -> None:
+        i += 1
+        while i <= n:
+            tree[i] += v
+            i += i & (-i)
+
+    def prefix(i: int) -> int:  # sum over positions [0, i)
+        s = 0
+        while i > 0:
+            s += tree[i]
+            i -= i & (-i)
+        return s
+
+    hits = np.zeros(n, bool)
+    plist = prev.tolist()
+    for i in range(n):
+        p = plist[i]
+        if p >= 0:
+            # distinct keys in (p, i) = active (last-occurrence) positions
+            hits[i] = prefix(i) - prefix(p + 1) + 1 <= capacity
+            add(p, -1)
+        add(i, 1)
+    return hits
+
+
+def _replay_page_cache(grp: dict, keys: List[str], key_idx: np.ndarray,
+                       is_w: np.ndarray, dtype: np.ndarray, seek: float,
+                       apply_writes: bool) -> np.ndarray:
+    """Per-group LRU replay in leader-arrival order: cold-page penalties,
+    plus (optionally) applying committed writes to the group's real state
+    machine exactly as the oracle does at commit time."""
+    cache = grp["page_cache"]
+    state = grp["state"]
+    pens = np.zeros(len(key_idx))
+    kil = key_idx.tolist()
+    wrl = is_w.tolist()
+    dtl = dtype.tolist()
+    for j, ki in enumerate(kil):
+        key = keys[ki]
+        if cache.get(key) is None:
+            pens[j] = seek
+        cache.put(key, True)
+        if apply_writes and wrl[j]:
+            state.apply(("put",
+                         GLOBAL if dtl[j] == GLOBAL_CODE else LOCAL,
+                         key, _VAL))
+    return pens
+
+
+def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
+                     serving: np.ndarray, hops: np.ndarray,
+                     key_idx: np.ndarray, keys: List[str],
+                     is_w: np.ndarray, glob: np.ndarray,
+                     dtype: np.ndarray) -> None:
+    """Resolve routes and apply writes for one churn epoch's ops (already
+    in schedule order) against the *current* ring membership — the
+    open-loop analogue of the closed-loop engine's lazy ``_resolve``."""
+    if not len(idxs):
+        return
+    ids = sim.records._group_ids
+    gw_of_code = [sim.gateway_of_group[g] for g in ids]
+    gsel = idxs[glob[idxs]]
+    if len(gsel):
+        if sim.gw_cache:
+            gcode = sim.records.group_code
+            for i in gsel.tolist():
+                gw = gw_of_code[client[i]]
+                key = keys[key_idx[i]]
+                cache = sim.gw_cache[gw]
+                cached = cache.get(key)
+                if cached is not None:
+                    owner_gw, h = cached, (0 if cached == gw else 1)
+                else:
+                    path = sim.ring.route(gw, key)
+                    owner_gw, h = path[-1], len(path) - 1
+                    cache.put(key, owner_gw)
+                serving[i] = gcode(sim.group_of_gateway[owner_gw])
+                hops[i] = h
+        else:
+            owner_code = {gw: sim.records._group_code[g]
+                          for g, gw in sim.gateway_of_group.items()}
+            owner, h = _batch_routes(sim.ring, gw_of_code, owner_code,
+                                     client[gsel], key_idx[gsel], keys)
+            serving[gsel] = owner
+            hops[gsel] = h
+    # writes land at the group that serves them under this epoch's
+    # membership; later joins/drains migrate them (§7 handoff semantics)
+    for i in idxs[is_w[idxs]].tolist():
+        g = serving[i] if dtype[i] else client[i]
+        tier = GLOBAL if dtype[i] else LOCAL
+        sim.groups[ids[g]]["state"].apply(
+            ("put", tier, keys[key_idx[i]], _VAL))
+
+
+# --------------------------------------------------------------- open loop
+def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
+                       workload_kw: dict) -> None:
+    """Fully batched open-loop run (Fig 13): exogenous Poisson arrivals
+    mean there is no closed-loop feedback, so the leader stage resolves in
+    one per-group pass — LRU replay for penalties, then the max-plus
+    departure scan ``dep_i = max(arr_i, dep_{i-1}) + svc_i`` through
+    :mod:`repro.kernels.maxplus_scan`.
+
+    Deferred auxiliary processes (churn drivers) are supported by
+    *segmenting* the batch at membership events: ops are routed and their
+    writes applied epoch by epoch against the then-current ring, while
+    the departure scan still runs once per serving group over the whole
+    run (the leader queue persists across epochs).
+    """
+    aux: Dict[int, Generator] = dict(sim.env.pending)
+    sim.env.pending = []
+    had_aux = bool(aux)
+    dm = _DelayModel(sim.net, sim.service)
+    gcode = sim.records.group_code
+
+    clients = []
+    for gi, gid in enumerate(list(sim.groups)):
+        if sim.groups[gid]["retired"]:
+            continue
+        sim.client_groups.add(gid)
+        clients.append((gcode(gid), gi, sim.groups[gid]["n"],
+                        sim._arrival_seed(gid)))
+    segs = _open_loop_segments(clients, rate, duration, sim.env.now,
+                               workload_kw)
+    if not segs and not aux:
         return
 
-    keys = segs[0][1].keys
-    client = np.concatenate([np.full(len(s[2]), s[0], dtype=np.int32)
-                             for s in segs])
-    t0 = np.concatenate([s[2] for s in segs])
-    key_idx = np.concatenate([s[3] for s in segs])
-    kind = np.concatenate([s[4] for s in segs])
-    dtype = np.concatenate([s[5] for s in segs])
-    fwd = np.concatenate([s[6] for s in segs])
+    keys = segs[0][1].keys if segs else []
+    if segs:
+        client = np.concatenate([np.full(len(s[2]), s[0], dtype=np.int32)
+                                 for s in segs])
+        t0 = np.concatenate([s[2] for s in segs])
+        key_idx = np.concatenate([s[3] for s in segs])
+        kind = np.concatenate([s[4] for s in segs])
+        dtype = np.concatenate([s[5] for s in segs])
+        fwd = np.concatenate([s[6] for s in segs])
+    else:
+        client = np.empty(0, np.int32)
+        t0 = np.empty(0)
+        key_idx = np.empty(0, np.int64)
+        kind = dtype = np.empty(0, np.uint8)
+        fwd = np.empty(0, bool)
     n_ops = len(t0)
     is_w = kind != READ_CODE
     glob = dtype == GLOBAL_CODE
-
-    # routing: one Chord route per unique (gateway, successor-vnode) class;
-    # with a §7.2 location cache, consult/populate the per-gateway caches
-    # in arrival order instead (hit/miss sequence is order-dependent)
     serving = client.copy()
     hops = np.zeros(n_ops, dtype=np.int32)
-    if glob.any():
+
+    if aux:
+        # membership-event segmentation: ops whose gateway *lookup* lands
+        # before an aux event route (and commit writes) under the
+        # membership in force at lookup time — t0 + cli->st (+ st->gw for
+        # global data), mirroring where the oracle calls ring.route
+        rt = t0 + np.where(is_w, dm.c_req[1], dm.c_req[0])
+        rt = np.where(glob, rt + np.where(is_w, dm.sg_req[1],
+                                          dm.sg_req[0]), rt)
+        order_t = np.argsort(rt, kind="stable")
+        t_sorted = rt[order_t]
+        heap: List[tuple] = [(sim.env.now, pid) for pid in aux]
+        heapq.heapify(heap)
+        pos = 0
+        while heap:
+            te, pid = heapq.heappop(heap)
+            end = int(np.searchsorted(t_sorted, te, side="left"))
+            _route_and_apply(sim, order_t[pos:end], client, serving, hops,
+                             key_idx, keys, is_w, glob, dtype)
+            pos = end
+            sim.env.now = te
+            gen = aux[pid]
+            try:
+                ev = gen.send(None)
+            except StopIteration:
+                del aux[pid]
+            else:
+                if not isinstance(ev, Timeout):
+                    raise TypeError("fast-engine auxiliary processes may "
+                                    "only yield Timeout")
+                heapq.heappush(heap, (te + ev.delay, pid))
+        _route_and_apply(sim, order_t[pos:], client, serving, hops,
+                         key_idx, keys, is_w, glob, dtype)
+        if not n_ops:
+            return
+    elif glob.any():
+        # routing: one Chord route per unique (gateway, successor-vnode)
+        # class; with a §7.2 location cache, consult/populate the
+        # per-gateway caches in arrival order instead (hit/miss sequence
+        # is order-dependent)
+        ids = sim.records._group_ids
         gw_of_code = [sim.gateway_of_group[g] for g in ids]
         if sim.gw_cache:
             gsel = np.nonzero(glob)[0]
@@ -628,65 +859,46 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                 serving[i] = gcode(sim.group_of_gateway[owner_gw])
                 hops[i] = h
         else:
-            owner, h = _batch_routes(sim, gw_of_code, client[glob],
-                                     key_idx[glob], keys)
+            owner_code = {gw: sim.records._group_code[g]
+                          for g, gw in sim.gateway_of_group.items()}
+            owner, h = _batch_routes(sim.ring, gw_of_code, owner_code,
+                                     client[glob], key_idx[glob], keys)
             serving[glob] = owner
             hops[glob] = h
     remote = glob & (serving != client)
+    lf = (~glob) & fwd
 
     # per-op delay columns (masked sequential adds, oracle term order)
     def by_w(pair):
         return np.where(is_w, pair[1], pair[0])
 
-    c_req, c_resp = by_w(dm.c_req), by_w(dm.c_resp)
-    f_req, f_resp = by_w(dm.f_req), by_w(dm.f_resp)
-    sg_req, sg_resp = by_w(dm.sg_req), by_w(dm.sg_resp)
-    h_req, g_resp = by_w(dm.h_req), by_w(dm.g_resp)
-    lf = (~glob) & fwd
-    arr = t0 + c_req
-    arr = np.where(lf, arr + f_req, arr)
-    arr = np.where(glob, arr + sg_req, arr)
-    for k in range(int(hops.max()) if n_ops else 0):
-        arr = np.where(hops > k, arr + h_req, arr)
-    arr = np.where(glob, arr + sg_req, arr)
+    arr = arrival_chain(np, t0, by_w(dm.c_req), by_w(dm.f_req),
+                        by_w(dm.sg_req), by_w(dm.h_req), lf, glob, hops,
+                        int(hops.max()) if n_ops else 0)
 
-    # leader stage: per-group LRU replay + max-plus scan in arrival order
+    # leader stage: per-group LRU replay + max-plus departure scan in
+    # arrival order (writes were already applied per epoch under churn)
+    ids = sim.records._group_ids
     dep = np.empty(n_ops)
     svc_base = np.where(is_w, dm.svc_base[1], dm.svc_base[0])
     for g in np.unique(serving).tolist():
         grp = sim.groups[ids[g]]
         sel = np.nonzero(serving == g)[0]
         order = sel[np.lexsort((sel, arr[sel]))]
-        cache = grp["page_cache"]
-        state = grp["state"]
-        pens = np.zeros(len(order))
-        kil = key_idx[order].tolist()
-        wrl = is_w[order].tolist()
-        dtl = dtype[order].tolist()
-        for j, ki in enumerate(kil):
-            key = keys[ki]
-            if cache.get(key) is None:
-                pens[j] = dm.seek
-            cache.put(key, True)
-            if wrl[j]:
-                state.apply(("put",
-                             GLOBAL if dtl[j] == GLOBAL_CODE else LOCAL,
-                             key, _VAL))
+        pens = _replay_page_cache(grp, keys, key_idx[order], is_w[order],
+                                  dtype[order], dm.seek,
+                                  apply_writes=not had_aux)
         svc = svc_base[order] + pens
-        s = np.cumsum(svc)
-        dep[order] = s + np.maximum.accumulate(arr[order] - (s - svc))
+        dep[order] = maxplus_depart(arr[order], svc)
         grp["leader"].busy_time += float(svc.sum())
 
     sizes = [sim.groups[g]["n"] for g in ids]
     q_by_code = np.asarray([dm.quorum(n) for n in sizes])
     ri_by_code = np.asarray([dm.readindex(n) for n in sizes])
     q_or_ri = np.where(is_w, q_by_code[serving], ri_by_code[serving])
-    comp = dep + q_or_ri
-    comp = np.where(glob, comp + sg_resp, comp)
-    comp = np.where(remote, comp + g_resp, comp)
-    comp = np.where(glob, comp + sg_resp, comp)
-    comp = np.where(lf, comp + f_resp, comp)
-    comp = comp + c_resp
+    comp = completion_chain(np, dep, q_or_ri, by_w(dm.sg_resp),
+                            by_w(dm.g_resp), by_w(dm.f_resp),
+                            by_w(dm.c_resp), lf, glob, remote)
 
     order = np.lexsort((np.arange(n_ops), comp))
     sim.records.extend_columns(t0[order], (comp - t0)[order], kind[order],

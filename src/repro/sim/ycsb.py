@@ -35,6 +35,7 @@ DTYPE_CODE = {d: i for i, d in enumerate(DTYPES)}
 
 
 _KEY_CACHE: dict = {}
+_STATE_CACHE: dict = {}
 
 
 def _key_strings(n: int) -> List[str]:
@@ -44,6 +45,33 @@ def _key_strings(n: int) -> List[str]:
     if keys is None:
         keys = _KEY_CACHE[n] = [f"user{i:08d}" for i in range(n)]
     return keys
+
+
+def _derived_state(seed: int, n_records: int, hotset_frac: float,
+                   zipf_s: float) -> tuple:
+    """Seed-derived sampling state (hotset permutation, zipf CDF), shared
+    read-only across workload instances.  Sweep grids instantiate the
+    same (seed, keyspace) workload once per grid point; memoizing keeps
+    workload construction out of the per-point cost for every engine."""
+    ck = (seed, n_records, hotset_frac, zipf_s)
+    st = _STATE_CACHE.get(ck)
+    if st is None:
+        order = np.random.default_rng(
+            np.random.SeedSequence([seed & 0xFFFFFFFF, 0x5E7])
+        ).permutation(n_records)
+        k = max(1, int(hotset_frac * n_records))
+        hot, cold = order[:k].astype(np.int64), order[k:].astype(np.int64)
+        w = 1.0 / np.arange(1.0, n_records + 1) ** zipf_s
+        cdf = np.cumsum(w / w.sum())
+        # shared across instances: arrays frozen, list views as tuples,
+        # so no workload can mutate another's sampling state
+        hot.setflags(write=False)
+        cold.setflags(write=False)
+        cdf.setflags(write=False)
+        st = _STATE_CACHE[ck] = (hot, cold, tuple(hot.tolist()),
+                                 tuple(cold.tolist()), cdf,
+                                 tuple(cdf.tolist()))
+    return st
 
 
 @dataclass
@@ -83,20 +111,12 @@ class YCSBWorkload:
         self.rng = random.Random(seed)
         self.keys = _key_strings(n_records)
         # hotset membership is seed-derived workload state shared by both
-        # engines; a vectorized permutation replaces the O(n) Fisher-Yates
-        order = np.random.default_rng(
-            np.random.SeedSequence([seed & 0xFFFFFFFF, 0x5E7])
-        ).permutation(n_records)
-        k = max(1, int(hotset_frac * n_records))
-        self._hotset_arr = order[:k].astype(np.int64)
-        self._coldset_arr = order[k:].astype(np.int64)
-        self.hotset = self._hotset_arr.tolist()
-        self.coldset = self._coldset_arr.tolist()
+        # engines (vectorized permutation, memoized across instances);
+        # the zipf CDF over recency ranks drives the 'latest' sampler
+        (self._hotset_arr, self._coldset_arr, self.hotset, self.coldset,
+         self._latest_cdf_arr, self._latest_cdf) = _derived_state(
+            seed, n_records, hotset_frac, zipf_s)
         self.hot_op_frac = hot_op_frac
-        # precompute zipf CDF over recency ranks for 'latest'
-        w = 1.0 / np.arange(1.0, n_records + 1) ** zipf_s
-        self._latest_cdf_arr = np.cumsum(w / w.sum())
-        self._latest_cdf = self._latest_cdf_arr.tolist()
 
     # ------------------------------------------------------------ sampling
     def _draw_index(self) -> int:

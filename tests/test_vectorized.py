@@ -214,12 +214,46 @@ def test_fast_open_loop_tolerance_and_determinism():
     assert not np.array_equal(f.records.latency, f3.records.latency)
 
 
-def test_fast_open_loop_rejects_aux_processes():
-    sim = FastSimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 3)
-    sim.env.process(sim.churn_proc(t_start=0.01, period=0.05, adds=1))
-    with pytest.raises(NotImplementedError):
-        sim.run_open_loop(rate_per_client=100, duration=0.5,
+def test_fast_open_loop_with_churn_statistical_tolerance():
+    """Open loop + churn in the same fast run (PR 3): routing and write
+    application segment at membership events; means must agree with the
+    generator oracle within 2% and the churn schedule must match."""
+    def run(engine):
+        sim = SimEdgeKV(setting="edge", seed=1, group_sizes=(3,) * 6,
+                        engine=engine)
+        sim.env.process(sim.churn_proc(t_start=0.3, period=0.3, adds=2))
+        sim.run_open_loop(rate_per_client=150, duration=4.0,
+                          workload_kw=dict(p_global=0.5, n_records=5000))
+        return sim
+
+    o, f = run("oracle"), run("fast")
+    assert [e[1:3] for e in o.churn_events] == [e[1:3] for e in f.churn_events]
+    assert len(f.churn_events) == 4
+    # op counts differ only by the independent Poisson streams (numpy vs
+    # random.expovariate), ~sqrt(2/lambda) relative
+    assert abs(len(f.records) - len(o.records)) / len(o.records) < 0.10
+    for kind in (None, "update", "read"):
+        mo, mf = o.mean_latency(kind=kind), f.mean_latency(kind=kind)
+        assert abs(mf - mo) / mo < 0.02, kind
+    # churn-added groups drained again: no global key stranded off-ring
+    from repro.core.kvstore import GLOBAL as G
+    for gid, g in f.groups.items():
+        for key in g["state"].stores[G]:
+            owner = f.group_of_gateway[f.ring.locate(key)]
+            assert owner == gid, (gid, key, owner)
+
+
+def test_fast_open_loop_churn_deterministic():
+    def run():
+        sim = FastSimEdgeKV(setting="edge", seed=1, group_sizes=(3,) * 4)
+        sim.env.process(sim.churn_proc(t_start=0.1, period=0.2, adds=1))
+        sim.run_open_loop(rate_per_client=150, duration=1.5,
                           workload_kw=dict(p_global=0.5))
+        return sim
+
+    a, b = run(), run()
+    assert np.array_equal(a.records.latency, b.records.latency)
+    assert [e[:3] for e in a.churn_events] == [e[:3] for e in b.churn_events]
 
 
 def test_deferred_environment_cannot_run():
