@@ -17,7 +17,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np
 
 _ROWS: list = []
+_FAILOVER_ROWS: list = []
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
+_FAILOVER_JSON_PATH = (Path(__file__).resolve().parent.parent
+                       / "BENCH_failover.json")
 
 
 def _row(name, value, derived=""):
@@ -28,6 +31,11 @@ def _row(name, value, derived=""):
 def _write_json():
     _JSON_PATH.write_text(json.dumps(
         dict(rows=_ROWS), indent=1, sort_keys=True) + "\n")
+
+
+def _write_failover_json():
+    _FAILOVER_JSON_PATH.write_text(json.dumps(
+        dict(rows=_FAILOVER_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _timed(name, fn):
@@ -156,6 +164,33 @@ def bench_fig_churn():
         _row(f"fig_churn.throughput_ops.{s}", f"{r['throughput_ops']:.0f}",
              f"clients={r['clients']};churn_events={r['churn_events']};"
              f"keys_moved={r['keys_moved']}")
+
+
+def bench_fig_failover():
+    """Unplanned gateway loss (fault-tolerance subsystem): baseline vs
+    crash/recover on both engines, with the recovery-latency stats and
+    walltimes mirrored into the committed BENCH_failover.json."""
+    from repro.sim.experiments import fig_failover
+    for engine in ("fast", "oracle"):
+        for r in fig_failover(ops_per_client=1000, engine=engine):
+            s = f"{r['scenario']}.{engine}"
+            _row(f"fig_failover.write_latency_ms.{s}",
+                 f"{r['write_latency_ms']:.2f}",
+                 f"p95={r['p95_latency_ms']:.2f};"
+                 f"p99={r['p99_latency_ms']:.2f};"
+                 f"group_p99_max={r['group_p99_max_ms']:.2f}")
+            _row(f"fig_failover.throughput_ops.{s}",
+                 f"{r['throughput_ops']:.0f}",
+                 f"clients={r['clients']};crashes={r['crash_events']};"
+                 f"promoted={r['keys_promoted']};lost_ops={r['lost_ops']}")
+            _row(f"fig_failover.unavailability_ms.{s}",
+                 f"{r['unavailability_ms']:.1f}",
+                 f"keys_unavailable={r['keys_unavailable']}")
+            _row(f"fig_failover.walltime_s.{s}", f"{r['walltime_s']:.2f}")
+            _FAILOVER_ROWS.append({k: (round(v, 4)
+                                       if isinstance(v, float) else v)
+                                   for k, v in r.items()})
+    _write_failover_json()
 
 
 def bench_fig_scale():
@@ -372,6 +407,7 @@ def main() -> None:
     bench_engine_speedup()
     _timed("sweep", bench_sweep)
     _timed("fig_churn", bench_fig_churn)
+    _timed("fig_failover", bench_fig_failover)
     _timed("fig_scale", bench_fig_scale)
     _timed("headline_claims", bench_headline_claims)
     _timed("fig5_6", bench_fig5_6_locality)

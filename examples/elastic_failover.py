@@ -1,10 +1,22 @@
-"""Elastic scaling + pod failover for checkpointed training state.
+"""Failover end to end: unplanned crash recovery vs planned drain, plus
+pod failover for checkpointed training state.
 
-1. Save a checkpoint across 8 hosts with a pod-1 mirror (EdgeKV §7.3
-   non-voting backup).
-2. Grow the fleet 8 -> 10 hosts: consistent hashing moves only ~K·R/m
-   shards (printed).
-3. Lose the whole primary pod: restore from the mirror.
+Part 1 — the EdgeKV fault-tolerance subsystem (repro.fault):
+  1. A 5-group cluster with chain-deep §7.3 backups under load.
+  2. PLANNED drain (`remove_group`): the comparison run — the departing
+     group hands its keys off synchronously, zero unavailability.
+  3. UNPLANNED crash (`crash_group`): no drain, no goodbye. The
+     phi-accrual detector accrues suspicion until the dead gateway is
+     declared failed, Chord stabilization repairs successor lists and
+     fingers without a full rebuild, and the backup chain's mirror is
+     promoted (global keys re-home with the linearizable read barrier,
+     local data is adopted under the dead group's namespace). The full
+     recovery timeline is printed.
+
+Part 2 — the same §7.3 idea at the checkpoint layer:
+  4. Save a checkpoint across 8 hosts with a pod-1 mirror, grow the
+     fleet 8 -> 10 (consistent hashing moves ~K·R/m shards), lose the
+     whole primary pod, restore from the mirror.
 
 Run: PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -15,7 +27,57 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import QuorumCheckpointer
+from repro.core import EdgeKVCluster, GLOBAL, LOCAL
+from repro.fault import FailureCoordinator
 
+# ---------------------------------------------------------------- part 1
+print("=== unplanned crash vs planned drain (repro.fault) ===")
+cluster = EdgeKVCluster([3] * 5, seed=0, backup_groups=True, backup_depth=2)
+keys = {f"sensor/{i}": i for i in range(150)}
+for k, v in keys.items():
+    cluster.put(k, v, GLOBAL, client_group="g0")
+cluster.put("calib", "local-state", LOCAL, client_group="g1")
+for g in cluster.groups.values():
+    for _ in range(10):
+        g.raft.step()  # let the learner mirrors apply
+
+# planned drain first: the clean path, for comparison
+drained = cluster.remove_group("g4")
+lost = sum(1 for k, v in keys.items()
+           if cluster.get(k, GLOBAL, client_group="g0").value != v)
+print(f"planned drain of g4: {drained} keys handed off synchronously, "
+      f"{len(keys) - lost}/{len(keys)} readable (no unavailability window)")
+
+# unplanned crash: detector -> stabilize -> promote
+coord = FailureCoordinator(cluster, heartbeat_period=0.05, threshold=8.0,
+                           stabilize_period=0.1, seed=0)
+coord.warmup(beats=20)
+coord.crash("g1")
+own_g1 = [k for k in keys if k in cluster.dead_groups["g1"][0].storage[
+    cluster.dead_groups["g1"][0].node_ids[0]].stores[GLOBAL]]
+print(f"g1 crashed holding {len(own_g1)} of the global keys "
+      f"(+ its local data); ring stabilized: {cluster.ring.stabilized}")
+coord.run_recovery()
+
+print("\nrecovery timeline (virtual time):")
+for ev in coord.timeline:
+    print(f"  t={ev.t * 1e3:8.1f} ms  {ev.step:<16} {ev.detail}")
+print(f"  unavailability window: "
+      f"{1e3 * coord.unavailability_window():.1f} ms")
+
+lost = sum(1 for k, v in keys.items()
+           if cluster.get(k, GLOBAL, client_group="g0").value != v)
+assert lost == 0, f"lost {lost} keys"
+r = cluster.get("calib", LOCAL, client_group="g1")
+assert r.value == "local-state"
+print(f"after recovery: {len(keys)}/{len(keys)} global keys readable, "
+      f"g1's local data served by {cluster.promoted_local['g1']}, "
+      f"finger rebuilds: {cluster.ring.finger_rebuilds}, "
+      f"repairs: {cluster.ring.stabilize_repairs} successor entries + "
+      f"{cluster.ring.finger_repairs} fingers")
+
+# ---------------------------------------------------------------- part 2
+print("\n=== pod failover for checkpointed training state ===")
 state = {f"layer{i}": {"w": jnp.ones((64, 64)) * i,
                        "b": jnp.zeros((64,)) + i}
          for i in range(12)}

@@ -58,17 +58,31 @@ class ChordRing:
         ~log(N)). Per-node ``weights`` multiply this count.
     """
 
-    def __init__(self, virtual_nodes: int = 1):
+    def __init__(self, virtual_nodes: int = 1, successors: int = 4):
         self.base_vnodes = max(1, int(virtual_nodes))
+        self.succ_depth = max(1, int(successors))
         self.weights: Dict[str, float] = {}
         self._vhashes: List[int] = []       # sorted virtual hashes
         self._vowners: List[str] = []       # parallel owner ids
         self.nodes: Dict[str, List[int]] = {}  # physical id -> its vhashes
         self._fingers: Dict[int, List[FingerEntry]] = {}
+        # Chord §E.3 successor lists: per vnode, the vnodes of the next
+        # `succ_depth` *distinct* physical owners clockwise. A planned
+        # membership event refreshes them synchronously; an abrupt crash
+        # leaves dead entries behind for stabilize() to repair.
+        self._succ_lists: Dict[int, List[int]] = {}
+        # vnodes of crashed nodes awaiting stabilization: still referenced
+        # by finger tables and successor lists, but owner-less and skipped
+        # by routing (a live Chord node times out on them and tries the
+        # next finger / successor-list entry)
+        self._dead: set = set()
         # churn instrumentation: tests assert add/remove never trigger a
         # from-scratch rebuild once the incremental path is in place
         self.finger_rebuilds = 0
         self.incremental_updates = 0
+        self.crashes = 0
+        self.stabilize_repairs = 0  # succ-list entries repaired by stabilize()
+        self.finger_repairs = 0     # finger entries repaired by fix_fingers()
 
     # ------------------------------------------------------------- topology
     def add_node(self, node_id: str, weight: float = 1.0) -> None:
@@ -89,8 +103,13 @@ class ChordRing:
             self._vhashes.insert(idx, vh)
             self._vowners.insert(idx, node_id)
         self._fingers_after_add(vhashes)
+        self._refresh_succ_lists()
 
     def remove_node(self, node_id: str) -> None:
+        """Planned departure: the node says goodbye and routing state is
+        repaired synchronously (fingers incrementally, successor lists by
+        refresh). Unlike :meth:`crash_node` this is always safe — the
+        departing node participates in the repair."""
         if node_id not in self.nodes:
             raise KeyError(node_id)
         removed = self.nodes.pop(node_id)
@@ -100,6 +119,167 @@ class ChordRing:
             del self._vowners[idx]
         self.weights.pop(node_id, None)
         self._fingers_after_remove(removed)
+        self._refresh_succ_lists()
+
+    # ------------------------------------------------- crash + stabilization
+    def crash_node(self, node_id: str) -> List[int]:
+        """Abrupt, unplanned loss of ``node_id`` — no goodbye protocol.
+
+        The node's vnodes leave the ownership arrays immediately (its key
+        range transfers to the successors), but finger tables and successor
+        lists still reference the dead vnodes: routing skips them (the
+        remote peer would time out) until :meth:`stabilize` and
+        :meth:`fix_fingers` repair the state. Raises instead of corrupting
+        the ring when the loss is not survivable:
+
+        * crashing the last live node leaves nobody to serve the key
+          space (so in a 2-node ring the first crash collapses to a
+          valid singleton — §7.3 promotion needs that — and the
+          survivor, now the last member, refuses to crash);
+        * crashing a node whose death completes the death of some live
+          vnode's entire r-deep successor chain (i.e. more than
+          ``succ_depth - 1`` un-stabilized simultaneous crashes) would
+          disconnect that vnode from the ring.
+        """
+        if node_id not in self.nodes:
+            raise KeyError(node_id)
+        if len(self.nodes) == 1:
+            raise RuntimeError(
+                f"cannot crash {node_id!r}: it is the last live node of "
+                "the ring (no successor could take over its key range)")
+        victims = set(self.nodes[node_id])
+        dead_after = self._dead | victims
+        if len(self.nodes) > 2:
+            # survivability: every live vnode must keep at least one live
+            # entry in its successor chain (a 2-node ring collapses to a
+            # valid singleton instead, its survivor owning everything)
+            for vh, chain in self._succ_lists.items():
+                if vh in dead_after:
+                    continue
+                if chain and all(s in dead_after for s in chain):
+                    raise RuntimeError(
+                        f"cannot crash {node_id!r}: it is the entire "
+                        f"remaining successor chain of vnode {vh} — more "
+                        f"than {self.succ_depth - 1} simultaneous crashes "
+                        "since the last stabilize() round")
+        removed = self.nodes.pop(node_id)
+        for vh in removed:
+            idx = bisect.bisect_left(self._vhashes, vh)
+            del self._vhashes[idx]
+            del self._vowners[idx]
+        self.weights.pop(node_id, None)
+        # the dead node's own routing state dies with it; everyone else's
+        # stale references remain until the periodic repair runs
+        for vh in removed:
+            self._fingers.pop(vh, None)
+            self._succ_lists.pop(vh, None)
+        self._dead |= set(removed)
+        self.crashes += 1
+        return removed
+
+    @property
+    def stabilized(self) -> bool:
+        """True when no routing state references a crashed vnode."""
+        return not self._dead
+
+    def stabilize(self) -> int:
+        """One Chord stabilization round: every live vnode re-validates its
+        successor chain, dropping dead entries and re-extending the list
+        from its first live successor. Returns the number of repaired
+        entries. Idempotent; O(V · r) per round, never a full rebuild."""
+        repaired = 0
+        dead = self._dead
+        for vh, chain in self._succ_lists.items():
+            if dead and any(s in dead for s in chain):
+                repaired += sum(1 for s in chain if s in dead)
+                self._succ_lists[vh] = self._succ_list_for(vh)
+            elif len(chain) < self._max_chain_len():
+                # refill a short chain (earlier crash consumed entries)
+                fresh = self._succ_list_for(vh)
+                repaired += len(fresh) - len(chain)
+                self._succ_lists[vh] = fresh
+        self.stabilize_repairs += repaired
+        self._maybe_clear_dead()
+        return repaired
+
+    def fix_fingers(self) -> int:
+        """Periodic finger repair: re-resolve every finger entry that
+        points at a crashed vnode against the live ring (the same patch
+        rule as a planned removal, run lazily). Returns the number of
+        entries repaired."""
+        if not self._dead:
+            return 0
+        repaired = 0
+        dead = self._dead
+        for entries in self._fingers.values():
+            for e in entries:
+                if e.node in dead:
+                    e.node = self._succ_vhash(e.start)
+                    repaired += 1
+        self.finger_repairs += repaired
+        self._maybe_clear_dead()
+        return repaired
+
+    def _maybe_clear_dead(self) -> None:
+        if not self._dead:
+            return
+        dead = self._dead
+        for entries in self._fingers.values():
+            for e in entries:
+                if e.node in dead:
+                    return
+        for chain in self._succ_lists.values():
+            if any(s in dead for s in chain):
+                return
+        self._dead = set()
+
+    def _max_chain_len(self) -> int:
+        """Longest possible distinct-owner chain with current membership."""
+        return min(self.succ_depth, max(0, len(self.nodes) - 1))
+
+    def _succ_list_for(self, vh: int) -> List[int]:
+        """Oracle successor chain for one vnode: the vnodes of the next
+        ``succ_depth`` distinct live physical owners walking clockwise
+        (excluding the vnode's own owner)."""
+        if not self._vhashes:
+            return []
+        idx = bisect.bisect_left(self._vhashes, vh)
+        n = len(self._vhashes)
+        own = self._vowners[idx] if idx < n and self._vhashes[idx] == vh \
+            else self.successor(vh)
+        chain: List[int] = []
+        seen = {own}
+        for step in range(1, n + 1):
+            j = (idx + step) % n
+            owner = self._vowners[j]
+            if owner not in seen:
+                seen.add(owner)
+                chain.append(self._vhashes[j])
+                if len(chain) == self.succ_depth:
+                    break
+        return chain
+
+    def _refresh_succ_lists(self) -> None:
+        """Recompute every live vnode's successor chain (planned membership
+        events repair synchronously; cost O(V · r), far below the V · BITS
+        of a finger rebuild)."""
+        self._succ_lists = {vh: self._succ_list_for(vh)
+                            for vh in self._vhashes if vh not in self._dead}
+
+    def successor_list(self, node_id: str) -> Dict[int, List[str]]:
+        """Per-vnode successor chains of ``node_id`` as physical owners
+        (diagnostics / tests)."""
+        out = {}
+        for vh in self.nodes[node_id]:
+            owners = []
+            for s in self._succ_lists.get(vh, []):
+                if s in self._dead:
+                    owners.append(None)  # dead, pending stabilization
+                else:
+                    owners.append(self._vowners[
+                        bisect.bisect_left(self._vhashes, s)])
+            out[vh] = owners
+        return out
 
     # -------------------------------------------------------------- lookup
     def successor(self, point: int) -> str:
@@ -184,8 +364,14 @@ class ChordRing:
     def _closest_preceding(self, from_vh: int, target: int) -> int:
         # Uses the precomputed FingerEntry.node (kept fresh by incremental
         # maintenance) — no per-finger bisect on the hot routing path.
+        # Fingers referencing crashed vnodes are skipped (the live node
+        # would time out on them and fall through to the next finger),
+        # so lookups keep converging on an un-stabilized ring.
         fingers = self._fingers[from_vh]
+        dead = self._dead
         for entry in reversed(fingers):
+            if dead and entry.node in dead:
+                continue
             if _in_open_interval(entry.node, from_vh, target):
                 return entry.node
         return from_vh
@@ -207,8 +393,10 @@ class ChordRing:
             return [start_node]
         cur = self.nodes[start_node][0]
         path = [start_node]
-        # iterate until cur's successor owns target: target in (cur, succ]
-        for _ in range(2 * BITS):  # hard bound; lookup converges well before
+        # iterate until cur's successor owns target: target in (cur, succ].
+        # The bound covers the worst case on an un-stabilized ring, where
+        # dead fingers force successor-hop fallbacks.
+        for _ in range(2 * BITS + len(self._vhashes)):
             succ = self._succ_vhash((cur + 1) % RING_SIZE)
             if _in_open_interval(target, cur, succ) or target == succ:
                 owner = self._vowners[bisect.bisect_left(self._vhashes, succ)]
@@ -216,11 +404,19 @@ class ChordRing:
                     path.append(owner)
                 return path
             nxt = self._closest_preceding(cur, target)
-            if nxt == cur:  # only our own fingers left -> successor owns it
-                owner = self._vowners[bisect.bisect_left(self._vhashes, succ)]
-                if path[-1] != owner:
-                    path.append(owner)
-                return path
+            if nxt == cur:
+                if not self._dead:
+                    # healthy fingers: no closer hop -> successor owns it
+                    owner = self._vowners[
+                        bisect.bisect_left(self._vhashes, succ)]
+                    if path[-1] != owner:
+                        path.append(owner)
+                    return path
+                # un-stabilized ring: every closer finger was dead — fall
+                # back to the successor hop (Chord's stabilize-era rule:
+                # the successor pointer keeps lookups correct, fingers
+                # only make them fast)
+                nxt = succ
             cur = nxt
             owner = self._vowners[bisect.bisect_left(self._vhashes, cur)]
             if path[-1] != owner:
@@ -266,19 +462,32 @@ class ChordRing:
                     break
         return out
 
+    def successor_groups(self, node_id: str, count: int) -> List[str]:
+        """First ``count`` distinct physical nodes following ``node_id``
+        on the ring (excluding itself), walking clockwise from its first
+        vnode — the chain-deep generalization of EdgeKV §7.3's static
+        backup-group assignment rule. Shorter when the ring has fewer
+        other nodes."""
+        vh = self.nodes[node_id][0]
+        idx = bisect.bisect_left(self._vhashes, vh)
+        n = len(self._vhashes)
+        out: List[str] = []
+        seen = {node_id}
+        for step in range(1, n + 1):
+            owner = self._vowners[(idx + step) % n]
+            if owner not in seen:
+                seen.add(owner)
+                out.append(owner)
+                if len(out) == count:
+                    break
+        return out
+
     def successor_group(self, node_id: str) -> str:
         """First distinct physical node following ``node_id`` on the ring —
         EdgeKV §7.3's static backup-group assignment rule."""
         if len(self.nodes) < 2:
             raise RuntimeError("need >= 2 nodes for a backup assignment")
-        vh = self.nodes[node_id][0]
-        idx = bisect.bisect_left(self._vhashes, vh)
-        n = len(self._vhashes)
-        for step in range(1, n + 1):
-            owner = self._vowners[(idx + step) % n]
-            if owner != node_id:
-                return owner
-        raise RuntimeError("unreachable")
+        return self.successor_groups(node_id, 1)[0]
 
     def __len__(self) -> int:
         return len(self.nodes)

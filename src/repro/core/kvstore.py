@@ -71,7 +71,7 @@ class EdgeGroup:
         # backup relationship can end (or rewire) without leaving replicated
         # residue behind.
         self.backup_storage: Dict[str, Dict[str, StorageModule]] = {}
-        self._learner_group: Optional["EdgeGroup"] = None
+        self._learner_groups: List["EdgeGroup"] = []
         self.learner_ids: List[str] = []
         self._seed = seed
         self.raft = LocalCluster(
@@ -81,7 +81,10 @@ class EdgeGroup:
         )
         self.reachable = True  # network-partition flag (§7.3 failover)
 
-    # -- §7.3: attach another group's nodes as non-voting learners
+    # -- §7.3: attach another group's nodes as non-voting learners.
+    # May be called once per backup group: with ``backup_depth > 1`` a
+    # primary attaches the nodes of several successor groups, each keeping
+    # an independent mirror (crash tolerance beyond a single backup loss).
     def attach_learners(self, learner_group: "EdgeGroup") -> None:
         import random as _random
         from .raft import RaftNode, stable_seed
@@ -99,7 +102,7 @@ class EdgeGroup:
         # the put-only snapshot seed below fully defines the mirror state
         mirror = {nid: StorageModule() for nid in learner_group.node_ids}
         learner_group.backup_storage[self.id] = mirror
-        self._learner_group = learner_group
+        self._learner_groups.append(learner_group)
         for nid in learner_group.node_ids:
             lid = f"{nid}@backup-of-{self.id}"
             node = RaftNode(
@@ -130,9 +133,9 @@ class EdgeGroup:
         for lid in self.learner_ids:
             self.raft.nodes.pop(lid, None)
         self.learner_ids.clear()
-        if self._learner_group is not None:
-            self._learner_group.backup_storage.pop(self.id, None)
-            self._learner_group = None
+        for lg in self._learner_groups:
+            lg.backup_storage.pop(self.id, None)
+        self._learner_groups = []
         for nid in self.node_ids:
             n = self.raft.nodes[nid]
             n.peers = [p for p in self.raft.nodes if p != nid]
@@ -188,7 +191,16 @@ class EdgeGroup:
         return OpResult(True, value=mirror[member].get(dtype, key),
                         quorum_size=1, leader=None)
 
-    # -- fault injection used by tests
+    # -- fault injection used by tests and by EdgeKVCluster.crash_group
+    def crash_all(self) -> List[str]:
+        """Unplanned loss of every member (no drain, no goodbye). The
+        group's Raft is dead; only learner mirrors on other groups'
+        hosts survive."""
+        for v in self.node_ids:
+            self.raft.crash(v)
+        self.reachable = False
+        return list(self.node_ids)
+
     def crash_minority(self) -> List[str]:
         k = (self.n - 1) // 2
         victims = self.node_ids[-k:] if k else []
@@ -240,19 +252,30 @@ class EdgeKVCluster:
 
     def __init__(self, group_sizes: List[int], *, virtual_nodes: int = 1,
                  seed: int = 0, gateway_cache: int = 0,
-                 backup_groups: bool = False):
-        self.ring = ChordRing(virtual_nodes=virtual_nodes)
+                 backup_groups: bool = False, backup_depth: int = 1,
+                 successors: int = 4):
+        self.ring = ChordRing(virtual_nodes=virtual_nodes,
+                              successors=successors)
         self.groups: Dict[str, EdgeGroup] = {}
         self.gateways: Dict[str, GatewayNode] = {}
         self.gateway_of_group: Dict[str, str] = {}
         self._seed = seed
         self._gateway_cache = gateway_cache
         self._backup_groups = backup_groups
+        self._backup_depth = max(1, int(backup_depth))
         self._next_gi = 0
         self.migrations: List[Tuple[str, str, int]] = []  # (event, gid, keys)
+        # crashed groups pending recovery: gid -> (dead EdgeGroup, its
+        # backup chain at crash time) — the chain names where the mirrors
+        # live, so recovery must remember it even though the live maps
+        # drop the dead group immediately.
+        self.dead_groups: Dict[str, Tuple[EdgeGroup, List[str]]] = {}
+        # dead gid -> live gid now serving its promoted local data
+        self.promoted_local: Dict[str, str] = {}
         for size in group_sizes:
             self._spawn_group(size, weight=1.0)
-        self.backup_of: Dict[str, str] = {}
+        self.backup_of: Dict[str, str] = {}        # gid -> first backup
+        self.backup_chain: Dict[str, List[str]] = {}  # gid -> full chain
         if backup_groups and len(group_sizes) >= 2:
             from .backup import assign_backup_groups
             assign_backup_groups(self)
@@ -325,14 +348,29 @@ class EdgeKVCluster:
             raise KeyError(gid)
         if len(self.groups) < 2:
             raise RuntimeError("cannot remove the last group")
+        # abrupt-loss edge case: a draining group may hold the only
+        # surviving mirror of a crashed group awaiting recovery — letting
+        # it leave would destroy the last copy of acknowledged writes
+        for dead_gid, (_, dead_chain) in self.dead_groups.items():
+            if not any(b in self.groups and b != gid for b in dead_chain):
+                raise RuntimeError(
+                    f"cannot remove {gid!r}: it holds the last surviving "
+                    f"mirror of crashed group {dead_gid!r} — recover it "
+                    "first")
         gw_id = self.gateway_of_group[gid]
         src = self.groups[gid]
+        # Adopted local data of crashed groups this group promoted must
+        # move out before the drain destroys the store (the drain below
+        # only re-homes GLOBAL keys) — it re-homes to the drained group's
+        # ring successor, and the promotion pointers follow.
+        self._migrate_adopted_local(gid, gw_id)
         # End the draining group's backup relationship BEFORE the handoff:
         # the group is leaving, so its mirror must not outlive it, and the
         # handoff's src.delete traffic has no business replicating to a
         # backup that will be rewired by _rewire_backups below anyway.
         src.detach_learners()
         self.backup_of.pop(gid, None)
+        self.backup_chain.pop(gid, None)
         lead = src.raft.run_until_leader()
         src.raft.step(0.0)  # read barrier before snapshotting ownership
         # defensive ownership filter (see add_group): the leader store holds
@@ -350,34 +388,151 @@ class EdgeKVCluster:
         del self.gateway_of_group[gid]
         self.backup_of = {g: b for g, b in self.backup_of.items()
                           if g != gid and b != gid}
+        self.backup_chain = {g: c for g, c in self.backup_chain.items()
+                             if g != gid}
         self._rewire_backups()
         self.migrations.append(("remove", gid, moved))
+        return moved
+
+    def _migrate_adopted_local(self, gid: str, gw_id: str) -> None:
+        """Move the namespaced local data ``gid`` adopted from crashed
+        groups (see :func:`repro.core.backup.promote_backup`) to the
+        drained group's ring successor, with the same write -> read
+        barrier -> delete handoff as global keys, and re-point the
+        promotion chain."""
+        adopted = [dead for dead, host in self.promoted_local.items()
+                   if host == gid]
+        if not adopted:
+            return
+        from .backup import PROMOTED_SEP
+        src = self.groups[gid]
+        new_host_gw = self.ring.successor_group(gw_id)
+        new_host = self.gateways[new_host_gw].group
+        lead = src.raft.run_until_leader()
+        src.raft.step(0.0)  # read barrier before snapshotting
+        prefixes = tuple(f"{dead}{PROMOTED_SEP}" for dead in adopted)
+        for key in [k for k in src.storage[lead.id].stores[LOCAL]
+                    if k.startswith(prefixes)]:
+            val = src.get(LOCAL, key, linearizable=True).value
+            new_host.put(LOCAL, key, val)
+            check = new_host.get(LOCAL, key, linearizable=True)
+            if not check.ok or check.value != val:  # pragma: no cover
+                raise RuntimeError(
+                    f"adopted-local handoff verification failed for {key!r}")
+            src.delete(LOCAL, key)
+        for dead in adopted:
+            self.promoted_local[dead] = new_host.id
+
+    # --------------------------------------------------- crash + recovery
+    def crash_group(self, gid: str) -> str:
+        """Unplanned loss of a whole group and its gateway — no drain, no
+        goodbye (contrast :meth:`remove_group`).
+
+        The gateway leaves the Chord ownership arrays abruptly
+        (:meth:`ChordRing.crash_node`): key ranges transfer to the
+        successors immediately, but finger tables and successor lists
+        keep dangling references until ``stabilize()``/``fix_fingers()``
+        repair them (routing skips dead fingers meanwhile). The group's
+        data survives only in the §7.3 mirrors its backup chain holds;
+        :meth:`recover_group` promotes them. Raises instead of mutating
+        anything when the crash exceeds the fault tolerance (last group,
+        a dead successor chain, or no surviving backup for some dead
+        group's mirrors).
+        """
+        if gid not in self.groups:
+            raise KeyError(gid)
+        if len(self.groups) < 2:
+            raise RuntimeError(
+                f"cannot crash {gid!r}: it is the last live group")
+        group = self.groups[gid]
+        chain = list(self.backup_chain.get(gid, []))
+        if self._backup_groups:
+            # storage-level survivability: every dead group (including
+            # this victim) must keep >= 1 live backup holding its mirror
+            for dead_gid, (_, dead_chain) in list(self.dead_groups.items()) \
+                    + [(gid, (group, chain))]:
+                if not any(b in self.groups and b != gid
+                           for b in dead_chain):
+                    raise RuntimeError(
+                        f"cannot crash {gid!r}: no surviving backup would "
+                        f"hold {dead_gid!r}'s mirror (backup_depth="
+                        f"{self._backup_depth} tolerates at most "
+                        f"{self._backup_depth} overlapping crashes)")
+        gw_id = self.gateway_of_group[gid]
+        # the ring guard raises before any mutation (last node / dead
+        # successor chain), so a refused crash leaves the cluster intact
+        self.ring.crash_node(gw_id)
+        group.crash_all()
+        self.dead_groups[gid] = (group, chain)
+        del self.groups[gid]
+        del self.gateways[gw_id]
+        del self.gateway_of_group[gid]
+        self.backup_of.pop(gid, None)
+        self.backup_chain.pop(gid, None)
+        self.backup_of = {g: b for g, b in self.backup_of.items()
+                          if b != gid}
+        self._invalidate_location_caches()
+        # live groups that used the dead group as a backup re-wire to the
+        # ring's new successor rule right away (the dead group's own
+        # mirrors are untouched: they live on its backups' hosts)
+        self._rewire_backups()
+        self.migrations.append(("crash", gid, 0))
+        return gid
+
+    def recover_group(self, gid: str, *, stabilize: bool = True) -> int:
+        """§7.3 backup promotion for a crashed group; returns the number
+        of re-homed global keys.
+
+        The first surviving backup in the dead group's chain donates its
+        mirror (applied learner state plus the unapplied tail of the
+        learner's log — nothing acknowledged is lost, nothing from before
+        the snapshot seed is replayed). Global keys re-home to their
+        current ring owners through those owners' Raft logs with the
+        linearizable read barrier; a key the new owner already committed
+        *after* the crash wins over the mirror copy (last-write-wins, no
+        rollback). Local data is promoted into the backup group under a
+        namespaced key range and stays addressable via the dead group id.
+        """
+        from .backup import promote_backup
+        if gid not in self.dead_groups:
+            raise KeyError(f"{gid!r} is not a crashed group pending "
+                           "recovery")
+        moved = promote_backup(self, gid)
+        if stabilize:
+            while not self.ring.stabilized:
+                self.ring.stabilize()
+                self.ring.fix_fingers()
+        self.migrations.append(("recover", gid, moved))
         return moved
 
     def _rewire_backups(self) -> None:
         """Re-apply the §7.3 successor rule after a membership change.
 
-        Groups whose successor changed drop their learners and attach the
-        new backup's nodes; a freshly attached learner is snapshot-seeded
-        with the donor's current state (see attach_learners) — never
-        backfilled from the historical log, which may contain migration
-        tombstones for keys the learner's group now owns.
+        Groups whose successor chain changed drop their learners and
+        attach the new backups' nodes; a freshly attached learner is
+        snapshot-seeded with the donor's current state (see
+        attach_learners) — never backfilled from the historical log, which
+        may contain migration tombstones for keys the learner's group now
+        owns.
         """
         if not self._backup_groups:
             return
-        from .backup import desired_backup_assignments
-        desired = desired_backup_assignments(self)
+        from .backup import desired_backup_chains
+        desired = desired_backup_chains(self)
         for gid, group in self.groups.items():
-            want = desired.get(gid)
-            if self.backup_of.get(gid) == want and not (
-                    want is None and group.learner_ids):
+            want = desired.get(gid, [])
+            if self.backup_chain.get(gid, []) == want and not (
+                    not want and group.learner_ids):
                 continue
             group.detach_learners()
-            if want is None:
+            if not want:
                 self.backup_of.pop(gid, None)
+                self.backup_chain.pop(gid, None)
             else:
-                group.attach_learners(self.groups[want])
-                self.backup_of[gid] = want
+                for b in want:
+                    group.attach_learners(self.groups[b])
+                self.backup_of[gid] = want[0]
+                self.backup_chain[gid] = list(want)
 
     def _migrate_key(self, src: EdgeGroup, dest: EdgeGroup, key: str) -> int:
         """Move one global key src -> dest through dest's Raft log."""

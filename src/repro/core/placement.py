@@ -27,6 +27,21 @@ def placement(cluster: "EdgeKVCluster", op: str, key: str, value: Any,
     """
     if dtype not in (LOCAL, GLOBAL):
         raise ValueError(f"data type must be 'local' or 'global', got {dtype!r}")
+    while client_group not in cluster.groups:
+        # crashed-and-recovered group: its local data was promoted into a
+        # surviving group under a namespaced key range (backup promotion,
+        # §7.3) and stays addressable through the dead group id; global
+        # ops route through the promoting group's gateway. The walk
+        # follows the promotion *chain*: the adopting group may itself
+        # have crashed later, re-namespacing the data one level deeper at
+        # its own host.
+        host_gid = cluster.promoted_local.get(client_group)
+        if host_gid is None:
+            raise KeyError(client_group)
+        if dtype == LOCAL:
+            from .backup import PROMOTED_SEP
+            key = f"{client_group}{PROMOTED_SEP}{key}"
+        client_group = host_gid
     group = cluster.groups[client_group]
 
     if dtype == LOCAL:

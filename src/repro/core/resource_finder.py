@@ -38,16 +38,24 @@ def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
                  linearizable: bool = True) -> OpResult:
     group, owner_gw, path = _owner(cluster, gw, key)
     if not group.reachable:
-        backup_gid = cluster.backup_of.get(group.id)
-        if backup_gid is None:
-            return OpResult(False)
-        # §7.3: backup serves READS ONLY, possibly stale -> serializable,
-        # answered from the mirror it maintains for the owner group.
-        backup = cluster.groups[backup_gid]
-        res = backup.backup_get(group.id, GLOBAL, key)
-        res.from_backup = True  # type: ignore[attr-defined]
-        res.dht_path = path  # type: ignore[attr-defined]
-        return res
+        # §7.3: a backup serves READS ONLY, possibly stale ->
+        # serializable, answered from the mirror it maintains for the
+        # owner group. With backup_depth > 1 the chain is walked until a
+        # member that is alive and holds the mirror answers.
+        chain = cluster.backup_chain.get(group.id) or (
+            [cluster.backup_of[group.id]]
+            if group.id in cluster.backup_of else [])
+        for backup_gid in chain:
+            backup = cluster.groups.get(backup_gid)
+            if backup is None or not backup.reachable:
+                continue
+            res = backup.backup_get(group.id, GLOBAL, key)
+            if not res.ok:
+                continue
+            res.from_backup = True  # type: ignore[attr-defined]
+            res.dht_path = path  # type: ignore[attr-defined]
+            return res
+        return OpResult(False)
     res = group.get(GLOBAL, key, linearizable=linearizable)
     res.dht_path = path  # type: ignore[attr-defined]
     return res

@@ -1,0 +1,29 @@
+"""Fault-tolerance subsystem: failure detection, Chord stabilization, and
+crash recovery (ROADMAP open item 1; EdgeKV §7.3 taken from planned
+join/drain to *unplanned* gateway loss).
+
+Three layers, composable but independently usable:
+
+* :mod:`repro.fault.detector` — a phi-accrual-style heartbeat failure
+  detector (Hayashibara et al. 2004, the exponential-model variant used
+  by Cassandra/Akka). Pure, seedable, array-friendly: suspicion
+  timelines evaluate as numpy column expressions so the vectorized
+  simulator can batch them.
+* Chord stabilization lives on :class:`repro.core.hashring.ChordRing`
+  itself (``crash_node`` / ``stabilize`` / ``fix_fingers`` with r-deep
+  per-vnode successor lists) — the ring is the shared control-plane
+  object, so the repair protocol belongs next to the data it repairs.
+* :mod:`repro.fault.recovery` — the crash-recovery coordinator for the
+  core cluster: detector-driven suspicion, stabilization rounds, and
+  §7.3 backup-group promotion (:meth:`EdgeKVCluster.crash_group` /
+  :meth:`EdgeKVCluster.recover_group`), with a recovery timeline for
+  experiments and examples.
+"""
+from .detector import (PhiAccrualDetector, detection_delay, phi_timeline,
+                       suspicion_times)
+from .recovery import FailureCoordinator, RecoveryEvent
+
+__all__ = [
+    "PhiAccrualDetector", "detection_delay", "phi_timeline",
+    "suspicion_times", "FailureCoordinator", "RecoveryEvent",
+]

@@ -116,6 +116,7 @@ class SimEdgeKV:
         virtual_nodes: int = 1,
         gateway_cache: int = 0,
         engine: str = "oracle",
+        successors: int = 4,
     ):
         if engine not in ("oracle", "fast"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -128,7 +129,8 @@ class SimEdgeKV:
         self.service = service or ServiceParams()
         self.seed = seed
         self.rng = random.Random(seed)
-        self.ring = ChordRing(virtual_nodes=virtual_nodes)
+        self.ring = ChordRing(virtual_nodes=virtual_nodes,
+                              successors=successors)
         self.groups: Dict[str, dict] = {}
         self.gateway_of_group: Dict[str, str] = {}
         self.group_of_gateway: Dict[str, str] = {}
@@ -140,9 +142,15 @@ class SimEdgeKV:
         self.client_spans: Dict[str, List[float]] = {}
         self.client_ops: Dict[str, int] = {}
         self.client_groups: set = set()  # groups hosting load generators
-        # churn log: (virtual time, "add"|"remove", gid, keys moved)
+        # churn log: (virtual time, "add"|"remove"|"crash"|"recover", gid,
+        # keys moved)
         self.churn_events: List[Tuple[float, str, str, int]] = []
         self.churn_epoch = 0  # bumped on every membership event
+        # fault bookkeeping: global keys owned by a crashed group and not
+        # yet recovered or re-written (key -> dead gid). Shared by both
+        # engines; mutated in place so the fast engine can hold the ref.
+        self.unavailable: Dict[str, str] = {}
+        self.lost_ops = 0  # reads served while their key was unavailable
         # §7.2 gateway location cache (beyond-paper evaluation: the paper
         # proposes it as future work; we measure it)
         self.gw_cache: Dict[str, Any] = {}
@@ -162,6 +170,7 @@ class SimEdgeKV:
             "state": StorageModule(),
             "page_cache": LRUCache(max(1, self.service.page_cache_keys)),
             "retired": False,
+            "crashed": False,
         }
         self.records.register_group(gid)
         self.ring.add_node(gw)
@@ -258,6 +267,106 @@ class SimEdgeKV:
                 moved = self.remove_group(gid)
                 yield Timeout(self.handoff_time(moved) + period)
 
+    # -------------------------------------------------------- fault injection
+    def crash_group(self, gid: str) -> int:
+        """Unplanned loss of a group mid-run — no drain, no goodbye.
+
+        Unlike :meth:`remove_group`, the group's global state is NOT
+        migrated: its keys become *unavailable* (reads targeting them are
+        counted as lost ops) until :meth:`recover_group` promotes the
+        §7.3 mirror or a client re-writes them at the new owner. The
+        gateway leaves the ring abruptly (:meth:`ChordRing.crash_node`):
+        ownership transfers to the successors immediately, but fingers
+        keep dangling references — routes taken before stabilization may
+        pay extra hops, exactly the window the failover experiment
+        measures. Returns the number of keys made unavailable.
+        """
+        g = self.groups[gid]
+        if g["retired"]:
+            raise ValueError(f"{gid} already retired")
+        if gid in self.client_groups:
+            raise ValueError(
+                f"cannot crash {gid}: load-generating clients attached")
+        if len(self.ring) < 2:
+            raise RuntimeError("cannot crash the last group")
+        gw = self.gateway_of_group[gid]
+        self.ring.crash_node(gw)  # raises before mutating on a fatal loss
+        g["retired"] = True
+        g["crashed"] = True
+        self.gw_cache.pop(gw, None)
+        self._invalidate_gw_caches()
+        store = g["state"].stores[GLOBAL]
+        for key in store:
+            self.unavailable[key] = gid
+        self.churn_events.append((self.env.now, "crash", gid, len(store)))
+        return len(store)
+
+    def recover_group(self, gid: str) -> int:
+        """Backup-group promotion of a crashed group's surviving mirror:
+        its global keys re-home to their current ring owners (modeling
+        the §7.3 learner-mirror handoff), except keys a client already
+        re-wrote at the new owner — those are newer and win. Finishes the
+        ring repair (stabilize + fix_fingers until clean). Returns the
+        number of promoted keys."""
+        g = self.groups[gid]
+        if not g["crashed"]:
+            raise ValueError(f"{gid} is not a crashed group")
+        moved = 0
+        store = g["state"].stores[GLOBAL]
+        for key in list(store):
+            if self.unavailable.pop(key, None) is None:
+                continue  # re-written at the live owner since the crash
+            owner_gid = self.group_of_gateway[self.ring.locate(key)]
+            self.groups[owner_gid]["state"].apply(
+                ("put", GLOBAL, key, store[key]))
+            moved += 1
+        store.clear()
+        g["crashed"] = False  # recovered (still retired: hosts are gone)
+        while not self.ring.stabilized:
+            self.ring.stabilize()
+            self.ring.fix_fingers()
+        # routes shorten after the repair: force both engines to re-resolve
+        self._invalidate_gw_caches()
+        self.churn_events.append((self.env.now, "recover", gid, moved))
+        return moved
+
+    @property
+    def fault_events(self) -> List[Tuple[float, str, str, int]]:
+        """Crash/recover entries of the churn log."""
+        return [ev for ev in self.churn_events if ev[1] in ("crash",
+                                                            "recover")]
+
+    def fault_proc(self, *, victims: Tuple[str, ...], t_crash: float = 0.1,
+                   heartbeat_period: float = 5e-3,
+                   phi_threshold: float = 8.0,
+                   stabilize_period: float = 0.02,
+                   gap: float = 0.1) -> Generator:
+        """Crash/recovery schedule driver (both engines).
+
+        Each victim crashes, stays dark for the phi-accrual detection
+        delay (closed form from :mod:`repro.fault.detector` — the last
+        heartbeat precedes the crash, so this is the detector's whole
+        contribution to the unavailability window), then pays one
+        ``stabilize_period`` per stabilization round until the ring is
+        clean, promotes the mirror, and pays the bulk-handoff transfer
+        for the promoted keys.
+        """
+        from repro.fault.detector import detection_delay
+        yield Timeout(t_crash)
+        for gid in victims:
+            self.crash_group(gid)
+            yield Timeout(detection_delay(heartbeat_period, phi_threshold))
+            # periodic repair: one round per period until the ring is
+            # clean; recover_group finishes any remainder synchronously
+            while not self.ring.stabilized:
+                self.ring.stabilize()
+                self.ring.fix_fingers()
+                # routes shorten as fingers heal: both engines re-resolve
+                self._invalidate_gw_caches()
+                yield Timeout(stabilize_period)
+            moved = self.recover_group(gid)
+            yield Timeout(self.handoff_time(moved) + gap)
+
     # ------------------------------------------------------------ group ops
     def _quorum_rtt(self, n: int, payload: int) -> float:
         """Time from leader broadcast to the majority-th follower ack."""
@@ -292,6 +401,10 @@ class SimEdgeKV:
             owner_gid = self.group_of_gateway[self.ring.locate(op.key)]
             if owner_gid != gid:
                 gid, g = owner_gid, self.groups[owner_gid]
+            if self.unavailable:
+                # a fresh write at the live owner supersedes the crashed
+                # copy: the key is available again (last write wins)
+                self.unavailable.pop(op.key, None)
         g["state"].apply(("put", tier, op.key, ("v", op.value_bytes)))
 
     def _group_read(self, gid: str, op: Op, tier: str) -> Generator:
@@ -303,6 +416,8 @@ class SimEdgeKV:
         need = (g["n"] // 2 + 1) - 1
         if need > 0:
             yield Timeout(2 * self.net.xfer("st_st", ACK_BYTES))
+        if tier == GLOBAL and self.unavailable and op.key in self.unavailable:
+            self.lost_ops += 1  # owner crashed, mirror not yet promoted
         g["state"].get(tier, op.key)
 
     # ------------------------------------------------------------ client op
@@ -374,17 +489,23 @@ class SimEdgeKV:
 
     # -------------------------------------------------------- load drivers
     def _closed_loop_plan(self, threads_per_client: int, ops_per_client: int,
-                          workload_kw: dict,
-                          seed_offset: int) -> List[ThreadPlan]:
+                          workload_kw: dict, seed_offset: int,
+                          client_groups: Optional[Tuple[str, ...]] = None,
+                          ) -> List[ThreadPlan]:
         """Pre-generate every worker thread's op schedule in bulk.
 
         One numpy stream per group, drawn in a single ``batch_ops`` call
         and sliced per thread — the schedule is a pure function of the
         seeds (never of event interleaving), identical for both engines.
+        ``client_groups`` restricts which groups host load generators
+        (fault experiments keep crash victims client-free); group seeds
+        stay a function of spawn order either way.
         """
         plan: List[ThreadPlan] = []
         for gi, gid in enumerate(list(self.groups)):
             if self.groups[gid]["retired"]:
+                continue
+            if client_groups is not None and gid not in client_groups:
                 continue
             wl_seed = 1000 + gi + seed_offset
             wl = YCSBWorkload(seed=wl_seed, **workload_kw)
@@ -407,16 +528,20 @@ class SimEdgeKV:
     def run_closed_loop(self, *, threads_per_client: int = 100,
                         ops_per_client: int = 10_000,
                         workload_kw: Optional[dict] = None,
-                        seed_offset: int = 0) -> None:
+                        seed_offset: int = 0,
+                        client_groups: Optional[Tuple[str, ...]] = None,
+                        ) -> None:
         """One client per group, each with N closed-loop worker threads
         sharing ``ops_per_client`` operations (the paper's YCSB setup).
 
         ``seed_offset`` shifts every client's workload seed uniformly (same
         offset => identical replay); the caller's ``workload_kw`` dict is
-        never mutated.
+        never mutated. ``client_groups`` restricts which groups host load
+        generators (default: every live group).
         """
         plan = self._closed_loop_plan(threads_per_client, ops_per_client,
-                                      dict(workload_kw or {}), seed_offset)
+                                      dict(workload_kw or {}), seed_offset,
+                                      client_groups)
         if self.engine == "fast":
             from .vectorized import run_closed_loop_fast
             run_closed_loop_fast(self, plan)
@@ -436,15 +561,20 @@ class SimEdgeKV:
             yield from self.client_op(tp.gid, op)
 
     def run_open_loop(self, *, rate_per_client: float, duration: float,
-                      workload_kw: Optional[dict] = None) -> None:
+                      workload_kw: Optional[dict] = None,
+                      client_groups: Optional[Tuple[str, ...]] = None,
+                      ) -> None:
         """Poisson arrivals at ``rate_per_client`` ops/s per client (Fig 13)."""
         workload_kw = dict(workload_kw or {})
         if self.engine == "fast":
             from .vectorized import run_open_loop_fast
-            run_open_loop_fast(self, rate_per_client, duration, workload_kw)
+            run_open_loop_fast(self, rate_per_client, duration, workload_kw,
+                               client_groups)
             return
         for gi, gid in enumerate(list(self.groups)):
             if self.groups[gid]["retired"]:
+                continue
+            if client_groups is not None and gid not in client_groups:
                 continue
             wl = YCSBWorkload(seed=2000 + gi, **workload_kw)
             self.client_groups.add(gid)

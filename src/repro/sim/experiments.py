@@ -218,6 +218,79 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
     return rows
 
 
+# ------------------------------------------------------------ fig failover
+def fig_failover(base_groups: int = 10, clients_per_group: int = 100,
+                 ops_per_client: int = 2000, crash_groups: int = 2,
+                 p_global: float = 0.5,
+                 service: Optional[ServiceParams] = None,
+                 seed: int = 0, engine: str = "fast") -> List[dict]:
+    """Unplanned gateway loss under YCSB load (beyond-paper scenario,
+    ROADMAP open item 1).
+
+    ``base_groups`` groups serve closed-loop clients at ``p_global``
+    global data; ``crash_groups`` extra (client-free) groups join before
+    the run and are crashed mid-run by :meth:`SimEdgeKV.fault_proc` — no
+    drain, no goodbye. Each crash pays the phi-accrual detection delay,
+    the Chord stabilization rounds, and the §7.3 mirror promotion before
+    the keys are available again. The *baseline* row runs the identical
+    topology without faults.
+
+    Reported per row: mean/write/global-write latency, p95/p99 tails
+    (overall via ``tail_latency`` and the worst per-group tail via
+    ``group_stats(percentiles=...)``), throughput, the unavailability
+    window (crash -> recovery, virtual time), promoted-key counts, and
+    the lost-op count (reads that targeted a crashed, not-yet-promoted
+    key). Both engines support the fault schedule; the fast path
+    segments at fault events exactly like churn segmentation.
+    """
+    rows = []
+    for scenario in ("baseline", "failover"):
+        sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                        service=service, seed=seed, engine=engine)
+        # crashable groups join before the load plan is drawn and stay
+        # client-free (both scenarios share the topology — the baseline
+        # differs only in the fault schedule)
+        base = tuple(sim.groups)
+        victims = [sim.add_group(3)[0] for _ in range(crash_groups)]
+        if scenario == "failover":
+            sim.env.process(sim.fault_proc(victims=tuple(victims),
+                                           t_crash=0.05))
+        t0 = time.perf_counter()
+        sim.run_closed_loop(
+            threads_per_client=clients_per_group,
+            ops_per_client=ops_per_client,
+            workload_kw=dict(p_global=p_global, n_records=5000),
+            client_groups=base)
+        wall = time.perf_counter() - t0
+        crash_t = {g: t for t, ev, g, _ in sim.churn_events
+                   if ev == "crash"}
+        rec_t = {g: t for t, ev, g, _ in sim.churn_events
+                 if ev == "recover"}
+        windows = [rec_t[g] - crash_t[g] for g in crash_t if g in rec_t]
+        tails = sim.records.group_stats(percentiles=(95, 99))
+        rows.append(dict(
+            scenario=scenario, engine=engine,
+            clients=base_groups * clients_per_group,
+            write_latency_ms=1e3 * sim.mean_latency(kind="update"),
+            read_latency_ms=1e3 * sim.mean_latency(kind="read"),
+            global_write_latency_ms=1e3 * sim.mean_latency(
+                kind="update", dtype="global"),
+            p95_latency_ms=1e3 * sim.tail_latency(95),
+            p99_latency_ms=1e3 * sim.tail_latency(99),
+            group_p99_max_ms=1e3 * max(s[4] for s in tails.values()),
+            throughput_ops=sim.throughput(),
+            crash_events=len(crash_t),
+            keys_unavailable=sum(n for _, ev, _, n in sim.churn_events
+                                 if ev == "crash"),
+            keys_promoted=sum(n for _, ev, _, n in sim.churn_events
+                              if ev == "recover"),
+            lost_ops=sim.lost_ops,
+            unavailability_ms=1e3 * max(windows) if windows else 0.0,
+            walltime_s=wall,
+        ))
+    return rows
+
+
 # ------------------------------------------------------------- fig scale
 def fig_scale(groups: int = 100, clients_per_group: int = 100,
               ops_per_client: int = 1000, p_global: float = 0.5,

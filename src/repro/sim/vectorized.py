@@ -52,10 +52,17 @@ same :meth:`YCSBWorkload.batch_ops` schedules, the event engine breaks
 virtual-time ties by process id (see :mod:`repro.sim.events`), and delay
 components are accumulated in exactly the order the oracle's Timeout
 chain adds them (float addition is not associative, so component tuples
-are added sequentially, never pre-summed). Open-loop and churn runs match
-statistically: numpy arrival streams replace ``random.expovariate``, and
-membership/routing changes resolve at op-schedule time rather than
-mid-flight (a one-op-per-thread window around each churn event).
+are added sequentially, never pre-summed). When membership can change
+mid-run (churn or fault drivers, or a §7.2 location cache), closed-loop
+global ops queue as **two-phase** heap events: a gateway-*lookup* event
+at exactly the virtual time the oracle calls ``ring.route``, which
+resolves the route against the then-current membership and only then
+pushes the leader-arrival event — a crash or join therefore lands on the
+same op boundary in both engines (the split adds the same delay terms in
+the same order, so membership-free runs stay bit-exact). Open-loop and
+churn/fault runs match statistically: numpy arrival streams replace
+``random.expovariate``, and state writes apply at slightly different
+pipeline stages (leader arrival vs post-quorum).
 """
 from __future__ import annotations
 
@@ -199,6 +206,10 @@ class _FastEngine:
         self.aux: Dict[int, Generator] = {}
         self.heap: List[tuple] = []
         self.last_time = 0.0
+        # per-thread flag: True when the thread's queued heap event is a
+        # leader *arrival*, False when it is the two-phase gateway
+        # *lookup* of a dynamically-routed global op
+        self.arrival_phase: List[bool] = []
 
     # ------------------------------------------------------------- groups
     def _sync_groups(self) -> None:
@@ -290,17 +301,18 @@ class _FastEngine:
             self.op_key.extend([keys[k] for k in tp.key_idx.tolist()])
 
         # Local ops never route, so their shapes are membership-independent
-        # and always precomputable. Global ops go lazy once the membership
-        # epoch moves (churn), or from the start when the §7.2 location
-        # cache makes routing order-dependent.
-        self.lazy_always = bool(sim.gw_cache)
-        self.epoch0 = sim.churn_epoch
+        # and always precomputable. Global ops go dynamic (two-phase
+        # lookup events, resolved at gateway-lookup time) when the §7.2
+        # location cache makes routing order-dependent OR any auxiliary
+        # process (churn/fault driver) can change membership mid-run —
+        # a route drawn before such an event must not outlive it.
+        self.dynamic = bool(sim.gw_cache) or bool(self.aux)
         self.serving: List[int] = self.client_code.tolist()
         self.hops: List[int] = [0] * n_ops
         self.op_pre: List[tuple] = [()] * n_ops
         self.op_svc: List[float] = [0.0] * n_ops
         self.op_post: List[tuple] = [()] * n_ops
-        self._static_shapes(plan, globals_too=not self.lazy_always)
+        self._static_shapes(plan, globals_too=not self.dynamic)
 
         self._l_dtype = self.dtype.tolist()
         self._l_is_w = self.is_w.tolist()
@@ -441,12 +453,39 @@ class _FastEngine:
         dtypes, is_w, l_key_idx = self._l_dtype, self._l_is_w, self._l_key_idx
         t_start, completion, latency = \
             self.t_start, self.completion, self.latency
-        seek = self.dm.seek
+        dm = self.dm
+        seek = dm.seek
         churn_events = sim.churn_events
+        unavail = sim.unavailable  # shared ref, mutated in place by faults
         home_memo, khash = self._home_memo, self._khash
-        lazy_always, epoch0 = self.lazy_always, self.epoch0
+        dynamic = self.dynamic
         pop, push = heapq.heappop, heapq.heappush
         max_completion = 0.0
+        arrival_phase = self.arrival_phase = [True] * len(cursor)
+
+        # Two-phase dynamic routing: once membership can change mid-run
+        # (location caches, churn, faults), a global op's route must
+        # resolve at its *gateway lookup* time — where the oracle calls
+        # ring.route — not when its predecessor completes. The op is
+        # queued as a lookup event (t_start -> client link -> st-gw), and
+        # only on popping it is the route resolved and the leader-arrival
+        # event pushed. The split adds the same delay components in the
+        # same order, so runs whose membership never changes stay
+        # bit-exact with the single-phase path.
+        def push_op(i: int, tau: int, t0c: float) -> None:
+            t_start[i] = t0c
+            if dtypes[i] and dynamic:
+                w = is_w[i]
+                tl = t0c + dm.c_req[w]
+                tl += dm.sg_req[w]
+                arrival_phase[tau] = False
+                push(heap, (tl, op_pid[i], tau))
+                return
+            a = t0c
+            for comp in op_pre[i]:
+                a += comp
+            arrival_phase[tau] = True
+            push(heap, (a, op_pid[i], tau))
 
         # start events: aux processes first (they were created first), then
         # every thread's first op — at the current virtual time, matching
@@ -454,17 +493,11 @@ class _FastEngine:
         base = sim.env.now
         for pid in self.aux:
             heap.append((base, pid, -1))
+        heapq.heapify(heap)
         for tau in range(len(cursor)):
             i = cursor[tau]
             if i < thread_end[tau]:
-                if lazy_always and dtypes[i]:
-                    self._resolve(i)
-                t_start[i] = base
-                a = base
-                for comp in op_pre[i]:
-                    a += comp
-                heap.append((a, op_pid[i], tau))
-        heapq.heapify(heap)
+                push_op(i, tau, base)
 
         while heap:
             a, pid, tau = pop(heap)
@@ -472,6 +505,19 @@ class _FastEngine:
                 self._step_aux(pid, a)
                 continue
             i = cursor[tau]
+            if not arrival_phase[tau]:
+                # gateway lookup of a dynamically-routed global op:
+                # resolve against the membership in force NOW, then queue
+                # the leader arrival (remaining request-chain terms)
+                self._resolve(i)
+                w = is_w[i]
+                h = dm.h_req[w]
+                for _ in range(self.hops[i]):
+                    a += h
+                a += dm.sg_req[w]
+                arrival_phase[tau] = True
+                push(heap, (a, pid, tau))
+                continue
             g = serving[i]
             # leader FIFO commit stage: the cumulative-max recurrence
             # dep = max(arrival, prev_departure) + service, online
@@ -508,8 +554,13 @@ class _FastEngine:
                         store = home_memo[ki] = \
                             sim.groups[owner_gid]["state"].stores[GLOBAL]
                     store[key] = _VAL
+                    if unavail:
+                        # fresh write at the live owner: available again
+                        unavail.pop(key, None)
                 else:
                     stores[dt][g][key] = _VAL
+            elif dt and unavail and key in unavail:
+                sim.lost_ops += 1  # read of a crashed, un-promoted key
             c = dep
             for comp in op_post[i]:
                 c += comp
@@ -520,14 +571,7 @@ class _FastEngine:
             nxt = i + 1
             if nxt < thread_end[tau]:
                 cursor[tau] = nxt
-                if dtypes[nxt] and (lazy_always
-                                    or sim.churn_epoch != epoch0):
-                    self._resolve(nxt)
-                t_start[nxt] = c
-                a2 = c
-                for comp in op_pre[nxt]:
-                    a2 += comp
-                push(heap, (a2, pid, tau))
+                push_op(nxt, tau, c)
 
         self._finish(max_completion)
 
@@ -746,11 +790,27 @@ def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
         tier = GLOBAL if dtype[i] else LOCAL
         sim.groups[ids[g]]["state"].apply(
             ("put", tier, keys[key_idx[i]], _VAL))
+    if sim.unavailable:
+        # fault window: walk this epoch's ops in schedule order — a
+        # global write re-validates its key, a global read of a
+        # still-unavailable key counts as lost (oracle semantics, batched
+        # per membership epoch)
+        unavail = sim.unavailable
+        for i in idxs.tolist():
+            if not glob[i]:
+                continue
+            k = keys[key_idx[i]]
+            if is_w[i]:
+                unavail.pop(k, None)
+            elif k in unavail:
+                sim.lost_ops += 1
 
 
 # --------------------------------------------------------------- open loop
 def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
-                       workload_kw: dict) -> None:
+                       workload_kw: dict,
+                       client_groups: Optional[Tuple[str, ...]] = None,
+                       ) -> None:
     """Fully batched open-loop run (Fig 13): exogenous Poisson arrivals
     mean there is no closed-loop feedback, so the leader stage resolves in
     one per-group pass — LRU replay for penalties, then the max-plus
@@ -772,6 +832,8 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     clients = []
     for gi, gid in enumerate(list(sim.groups)):
         if sim.groups[gid]["retired"]:
+            continue
+        if client_groups is not None and gid not in client_groups:
             continue
         sim.client_groups.add(gid)
         clients.append((gcode(gid), gi, sim.groups[gid]["n"],

@@ -1,0 +1,299 @@
+"""Core-layer crash recovery: unplanned group loss, backup-chain
+promotion, exactness guarantees (no lost acknowledged write, exactly one
+owner), multi-crash tolerance, and the guard rails."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EdgeKVCluster, LOCAL, GLOBAL
+
+
+def _load(cluster, n=60, prefix="glob"):
+    keys = {f"{prefix}/{i}": f"v{i}" for i in range(n)}
+    gids = list(cluster.groups)
+    for i, (k, v) in enumerate(keys.items()):
+        cluster.put(k, v, GLOBAL, client_group=gids[i % len(gids)])
+    return keys
+
+
+def _replicate(cluster, steps=10):
+    for g in cluster.groups.values():
+        for _ in range(steps):
+            g.raft.step()
+
+
+def _owners(cluster, keys):
+    holders = {k: [] for k in keys}
+    for g in cluster.groups.values():
+        lead = g.raft.run_until_leader()
+        store = g.storage[lead.id].stores[GLOBAL]
+        for k in keys:
+            if k in store:
+                holders[k].append(g.id)
+    return holders
+
+
+def _assert_exact(cluster, keys, *, client_group):
+    """The acceptance invariant: every key readable with its last
+    acknowledged value, held by exactly its ring owner."""
+    lost = {k for k, v in keys.items()
+            if cluster.get(k, GLOBAL, client_group=client_group).value != v}
+    assert not lost, f"lost {len(lost)}: {sorted(lost)[:5]}"
+    for k, hs in _owners(cluster, keys).items():
+        assert hs == [cluster.gateways[cluster.ring.locate(k)].group.id], \
+            (k, hs)
+
+
+def test_single_crash_recovery_is_exact():
+    c = EdgeKVCluster([3] * 4, seed=0, backup_groups=True)
+    keys = _load(c)
+    _replicate(c)
+    victim = max(c.groups, key=lambda g: sum(
+        1 for k in keys
+        if c.gateways[c.ring.locate(k)].group.id == g))
+    c.crash_group(victim)
+    assert victim in c.dead_groups and victim not in c.groups
+    moved = c.recover_group(victim)
+    assert moved > 0
+    assert c.ring.stabilized
+    survivor = next(iter(c.groups))
+    _assert_exact(c, keys, client_group=survivor)
+    assert c.migrations[-2:] == [("crash", victim, 0),
+                                 ("recover", victim, moved)]
+
+
+def test_crash_preserves_unreplicated_tail():
+    """A write acknowledged JUST before the crash (no extra heartbeat
+    rounds for the learner to apply it) must survive promotion — the
+    learner's log tail carries it."""
+    c = EdgeKVCluster([3, 3, 3], seed=1, backup_groups=True)
+    keys = _load(c, 30)
+    _replicate(c)
+    # last-second writes, then crash without any raft.step
+    late = {}
+    for i in range(8):
+        k = f"late/{i}"
+        assert c.put(k, f"L{i}", GLOBAL, client_group="g0").ok
+        late[k] = f"L{i}"
+    keys.update(late)
+    victim = next(g for g in c.groups
+                  if any(c.gateways[c.ring.locate(k)].group.id == g
+                         for k in late))
+    c.crash_group(victim)
+    c.recover_group(victim)
+    survivor = next(iter(c.groups))
+    _assert_exact(c, keys, client_group=survivor)
+
+
+def test_post_crash_write_wins_over_mirror():
+    """A key re-written at its new owner during the unavailability window
+    must not be rolled back by the promotion."""
+    c = EdgeKVCluster([3] * 4, seed=2, backup_groups=True)
+    keys = _load(c)
+    _replicate(c)
+    victim = max(c.groups, key=lambda g: sum(
+        1 for k in keys
+        if c.gateways[c.ring.locate(k)].group.id == g))
+    vkeys = [k for k in keys
+             if c.gateways[c.ring.locate(k)].group.id == victim]
+    c.crash_group(victim)
+    survivor = next(iter(c.groups))
+    fresh = vkeys[0]
+    assert c.put(fresh, "NEWER", GLOBAL, client_group=survivor).ok
+    keys[fresh] = "NEWER"
+    c.recover_group(victim)
+    _assert_exact(c, keys, client_group=survivor)
+
+
+def test_local_data_promoted_and_addressable():
+    c = EdgeKVCluster([3, 3, 3], seed=3, backup_groups=True)
+    c.put("mine", "private", LOCAL, client_group="g1")
+    c.put("other", "x", LOCAL, client_group="g0")
+    _replicate(c)
+    c.crash_group("g1")
+    c.recover_group("g1")
+    host = c.promoted_local["g1"]
+    assert host in c.groups
+    # dead group id keeps addressing its local data (served by the host)
+    assert c.get("mine", LOCAL, client_group="g1").value == "private"
+    # writes through the dead id are authoritative post-promotion
+    assert c.put("mine", "updated", LOCAL, client_group="g1").ok
+    assert c.get("mine", LOCAL, client_group="g1").value == "updated"
+    # no namespace bleed into the host's own local data
+    assert c.get("mine", LOCAL, client_group="g0").value is None
+
+
+def test_failover_reads_during_window_then_promotion():
+    """Before recovery the §7.3 read-only failover path serves the dead
+    group's keys from a chain mirror; writes to it fail."""
+    c = EdgeKVCluster([3] * 4, seed=11, backup_groups=True, backup_depth=2)
+    keys = _load(c)
+    _replicate(c)
+    victim = max(c.groups, key=lambda g: sum(
+        1 for k in keys
+        if c.gateways[c.ring.locate(k)].group.id == g))
+    vkeys = [k for k in keys
+             if c.gateways[c.ring.locate(k)].group.id == victim]
+    # reachable=False failover (partition-style): reads from the mirror
+    c.groups[victim].crash_majority()
+    r = c.get(vkeys[0], GLOBAL, client_group=next(
+        g for g in c.groups if g != victim))
+    assert r.ok and r.value == keys[vkeys[0]]
+    assert getattr(r, "from_backup", False)
+
+
+def test_double_crash_with_depth_two():
+    c = EdgeKVCluster([3] * 6, seed=4, backup_groups=True, backup_depth=2)
+    keys = _load(c, 80)
+    c.put("loc4", "v", LOCAL, client_group="g4")
+    _replicate(c)
+    c.crash_group("g4")
+    c.crash_group("g2")
+    assert set(c.dead_groups) == {"g4", "g2"}
+    c.recover_group("g2")
+    c.recover_group("g4")
+    _assert_exact(c, keys, client_group="g0")
+    assert c.get("loc4", LOCAL, client_group="g4").value == "v"
+
+
+def test_adjacent_double_crash_beyond_depth_refused():
+    """Crashing a group AND its only backup must be refused with a clear
+    error (the mirror would die too), leaving the cluster intact."""
+    c = EdgeKVCluster([3] * 4, seed=5, backup_groups=True, backup_depth=1)
+    keys = _load(c, 40)
+    _replicate(c)
+    g1 = next(iter(c.groups))
+    backup = c.backup_of[g1]
+    c.crash_group(g1)
+    with pytest.raises(RuntimeError, match="no surviving backup"):
+        c.crash_group(backup)
+    assert backup in c.groups  # refused crash mutated nothing
+    c.recover_group(g1)
+    _assert_exact(c, keys, client_group=backup)
+
+
+def test_crash_last_group_refused():
+    c = EdgeKVCluster([3], seed=0)
+    with pytest.raises(RuntimeError):
+        c.crash_group("g0")
+
+
+def test_crash_without_backup_groups_refuses_if_configured_off():
+    """Without §7.3 backups there is no mirror: the global keys the dead
+    group owned are gone — crash_group still works (the ring heals) but
+    recover_group reports the truth."""
+    c = EdgeKVCluster([3, 3, 3], seed=6)  # backup_groups=False
+    _load(c, 20)
+    c.crash_group("g1")
+    with pytest.raises(RuntimeError, match="no member of its backup"):
+        c.recover_group("g1")
+
+
+def test_remove_group_holding_last_mirror_refused():
+    """Planned drain of the group holding a pending dead group's only
+    surviving mirror must raise instead of destroying the last copy."""
+    c = EdgeKVCluster([3] * 4, seed=7, backup_groups=True, backup_depth=1)
+    _load(c, 40)
+    _replicate(c)
+    g = next(iter(c.groups))
+    backup = c.backup_of[g]
+    c.crash_group(g)
+    with pytest.raises(RuntimeError, match="last surviving mirror"):
+        c.remove_group(backup)
+    assert backup in c.groups
+    c.recover_group(g)
+    c.remove_group(backup)  # fine once recovery consumed the mirror
+
+
+def test_chained_crash_of_promoting_group_keeps_local_data():
+    """Regression: after g's local data is adopted by host h, a later
+    crash of h re-namespaces it one level deeper at h's own host — the
+    placement redirect must follow the promotion chain, not a single
+    hop."""
+    c = EdgeKVCluster([3] * 6, seed=9, backup_groups=True, backup_depth=2)
+    c.put("calib", "local-v", LOCAL, client_group="g1")
+    _replicate(c)
+    c.crash_group("g1")
+    c.recover_group("g1")
+    host1 = c.promoted_local["g1"]
+    c.crash_group(host1)
+    c.recover_group(host1)
+    assert c.get("calib", LOCAL, client_group="g1").value == "local-v"
+    # the intermediate dead host stays addressable too
+    assert c.put("h", "x", LOCAL, client_group=host1).ok
+    assert c.get("h", LOCAL, client_group=host1).value == "x"
+
+
+def test_drain_of_promoting_group_migrates_adopted_local_data():
+    """Regression: a planned remove_group of the group hosting a crashed
+    group's promoted local data must re-home that data (the drain only
+    migrates global keys), keeping it addressable via the dead gid."""
+    c = EdgeKVCluster([3] * 5, seed=10, backup_groups=True, backup_depth=2)
+    keys = _load(c, 30)
+    c.put("calib", "local-v", LOCAL, client_group="g1")
+    _replicate(c)
+    c.crash_group("g1")
+    c.recover_group("g1")
+    host = c.promoted_local["g1"]
+    c.remove_group(host)
+    assert host not in c.groups
+    new_host = c.promoted_local["g1"]
+    assert new_host in c.groups and new_host != host
+    assert c.get("calib", LOCAL, client_group="g1").value == "local-v"
+    _assert_exact(c, keys, client_group=new_host)
+
+
+def test_recover_unknown_or_live_group_raises():
+    c = EdgeKVCluster([3, 3], seed=8, backup_groups=True)
+    with pytest.raises(KeyError):
+        c.recover_group("g0")  # alive
+    with pytest.raises(KeyError):
+        c.recover_group("nope")
+
+
+# --------------------------------------------------------------- property
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=8),
+       st.integers(0, 3))
+def test_property_no_lost_or_double_owned_keys(seq, seed):
+    """Arbitrary interleavings of add_group / remove_group / crash_group
+    (+ stabilize rounds and recoveries): after recovering every pending
+    crash, no acknowledged key is lost and each is held by exactly its
+    ring owner — and every refused operation left the cluster intact."""
+    c = EdgeKVCluster([3] * 4, seed=seed, backup_groups=True,
+                      backup_depth=2)
+    keys = _load(c, 25)
+    _replicate(c, 6)
+    serial = 0
+    for step in seq:
+        r = step % 5
+        live = list(c.groups)
+        if r == 0 and len(live) > 2:
+            victim = live[step % len(live)]
+            try:
+                c.crash_group(victim)
+            except RuntimeError:
+                assert victim in c.groups  # refusal is non-mutating
+        elif r == 1 and len(live) > 2:
+            victim = live[step % len(live)]
+            try:
+                c.remove_group(victim)
+            except RuntimeError:
+                assert victim in c.groups
+        elif r == 2:
+            c.ring.stabilize()
+            c.ring.fix_fingers()
+        elif r == 3 and c.dead_groups:
+            c.recover_group(next(iter(c.dead_groups)))
+        else:
+            c.add_group(3)
+        # a fresh acknowledged write survives whatever comes next
+        k = f"w/{serial}"
+        serial += 1
+        writer = next(iter(c.groups))
+        assert c.put(k, serial, GLOBAL, client_group=writer).ok
+        keys[k] = serial
+    for gid in list(c.dead_groups):
+        c.recover_group(gid)
+    survivor = next(iter(c.groups))
+    _assert_exact(c, keys, client_group=survivor)
+    assert c.ring.stabilized

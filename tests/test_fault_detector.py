@@ -1,0 +1,132 @@
+"""Phi-accrual failure detector: closed forms, vectorized timelines, and
+the coordinator pipeline (detector -> stabilize -> promote)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.fault import (PhiAccrualDetector, detection_delay, phi_timeline,
+                         suspicion_times)
+from repro.fault.detector import LOG10_E
+
+
+def test_phi_closed_form_and_monotonicity():
+    dt = np.linspace(0.0, 5.0, 101)
+    phi = phi_timeline(dt, mean_interval=0.5)
+    assert phi[0] == 0.0
+    assert np.all(np.diff(phi) > 0)  # suspicion only accrues
+    # exponential model: phi = dt / mean * log10(e)
+    np.testing.assert_allclose(phi, dt / 0.5 * LOG10_E, rtol=1e-12)
+
+
+def test_detection_delay_inverts_phi():
+    for mean in (1e-3, 0.05, 2.0):
+        for th in (1.0, 8.0, 12.0):
+            d = detection_delay(mean, th)
+            assert math.isclose(float(phi_timeline(d, mean)), th,
+                                rel_tol=1e-12)
+
+
+def test_detection_delay_scales_with_heartbeat_period():
+    # twice the heartbeat period -> twice the detection time
+    assert math.isclose(detection_delay(0.2, 8.0),
+                        2 * detection_delay(0.1, 8.0), rel_tol=1e-12)
+
+
+def test_negative_elapsed_clamps_to_zero():
+    assert float(phi_timeline(-1.0, 0.1)) == 0.0
+
+
+def test_detector_needs_two_heartbeats():
+    det = PhiAccrualDetector()
+    assert det.phi("a", 10.0) == 0.0
+    det.heartbeat("a", 0.0)
+    assert det.phi("a", 10.0) == 0.0  # no interval estimate yet
+    det.heartbeat("a", 1.0)
+    assert det.phi("a", 10.0) > 0.0
+
+
+def test_detector_suspects_after_silence():
+    det = PhiAccrualDetector(threshold=8.0)
+    for i in range(50):
+        det.heartbeat("gw0", i * 0.1)
+        det.heartbeat("gw1", i * 0.1)
+    t_last = 49 * 0.1
+    assert not det.suspect("gw0", t_last + 0.05)
+    # silence: phi crosses the threshold exactly at the closed form
+    d = det.detection_delay("gw0")
+    assert math.isclose(d, detection_delay(0.1, 8.0), rel_tol=1e-9)
+    assert not det.suspect("gw0", t_last + 0.99 * d)
+    assert det.suspect("gw0", t_last + 1.01 * d)
+    # gw1 kept beating -> never suspected
+    det.heartbeat("gw1", t_last + d)
+    assert det.suspected(t_last + 1.01 * d) == ["gw0"]
+
+
+def test_detector_window_bounds_history():
+    det = PhiAccrualDetector(window=4)
+    # old 1s intervals must be forgotten once 0.1s intervals fill the window
+    t = 0.0
+    for _ in range(5):
+        det.heartbeat("a", t)
+        t += 1.0
+    for _ in range(5):
+        det.heartbeat("a", t)
+        t += 0.1
+    assert math.isclose(det.mean_interval("a"), 0.1, rel_tol=1e-9)
+
+
+def test_heartbeat_backwards_raises_and_forget_clears():
+    det = PhiAccrualDetector()
+    det.heartbeat("a", 1.0)
+    with pytest.raises(ValueError):
+        det.heartbeat("a", 0.5)
+    det.forget("a")
+    det.heartbeat("a", 0.5)  # fresh history after forget
+
+
+def test_phi_curve_matches_scalar_phi():
+    det = PhiAccrualDetector()
+    for i in range(10):
+        det.heartbeat("a", i * 0.2)
+    ts = np.linspace(1.8, 4.0, 23)
+    curve = det.phi_curve("a", ts)
+    scalars = np.array([det.phi("a", float(t)) for t in ts])
+    np.testing.assert_allclose(curve, scalars, rtol=1e-12)
+
+
+def test_suspicion_times_vectorized():
+    hb = [i * 0.05 for i in range(40)]
+    crash = 1.9000001  # heartbeats after the crash are never observed
+    t = suspicion_times(hb, crash, threshold=8.0)
+    assert math.isclose(t, 1.90 + detection_delay(0.05, 8.0), rel_tol=1e-9)
+    with pytest.raises(ValueError):
+        suspicion_times([0.0], 1.0)
+
+
+def test_coordinator_pipeline_timeline():
+    """detector -> stabilize -> promote, end to end on a real cluster."""
+    from repro.core import EdgeKVCluster, GLOBAL
+    from repro.fault import FailureCoordinator
+
+    c = EdgeKVCluster([3] * 4, seed=3, backup_groups=True, backup_depth=2)
+    keys = {f"k/{i}": i for i in range(40)}
+    for k, v in keys.items():
+        c.put(k, v, GLOBAL, client_group="g0")
+    for g in c.groups.values():
+        for _ in range(10):
+            g.raft.step()
+    coord = FailureCoordinator(c, heartbeat_period=0.05, seed=1)
+    coord.warmup(beats=10)
+    coord.crash("g2")
+    assert not c.ring.stabilized
+    coord.run_recovery()
+    steps = [e.step for e in coord.timeline]
+    assert steps[0] == "heartbeat-warmup"
+    assert "crash" in steps and "suspect" in steps and "promote" in steps
+    assert steps.index("suspect") < steps.index("promote")
+    assert c.ring.stabilized
+    assert coord.unavailability_window() > 0
+    lost = [k for k, v in keys.items()
+            if c.get(k, GLOBAL, client_group="g0").value != v]
+    assert not lost
