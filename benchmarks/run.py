@@ -18,9 +18,12 @@ import numpy as np
 
 _ROWS: list = []
 _FAILOVER_ROWS: list = []
+_HANDOFF_ROWS: list = []
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 _FAILOVER_JSON_PATH = (Path(__file__).resolve().parent.parent
                        / "BENCH_failover.json")
+_HANDOFF_JSON_PATH = (Path(__file__).resolve().parent.parent
+                      / "BENCH_handoff.json")
 
 
 def _row(name, value, derived=""):
@@ -36,6 +39,11 @@ def _write_json():
 def _write_failover_json():
     _FAILOVER_JSON_PATH.write_text(json.dumps(
         dict(rows=_FAILOVER_ROWS), indent=1, sort_keys=True) + "\n")
+
+
+def _write_handoff_json():
+    _HANDOFF_JSON_PATH.write_text(json.dumps(
+        dict(rows=_HANDOFF_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _timed(name, fn):
@@ -191,6 +199,37 @@ def bench_fig_failover():
                                        if isinstance(v, float) else v)
                                    for k, v in r.items()})
     _write_failover_json()
+
+
+def bench_fig_handoff():
+    """Async key handoff under live writes: atomic bulk migration vs
+    per-key migration leases, on both engines, with the lease counters
+    (pulled / redirected / superseded — the protocol's abort-retry
+    accounting) mirrored into the committed BENCH_handoff.json."""
+    from repro.sim.experiments import fig_handoff
+    for engine in ("fast", "oracle"):
+        for r in fig_handoff(ops_per_client=1000, engine=engine):
+            s = f"{r['scenario']}.{engine}"
+            _row(f"fig_handoff.write_latency_ms.{s}",
+                 f"{r['write_latency_ms']:.2f}",
+                 f"p95={r['p95_latency_ms']:.2f};"
+                 f"p99={r['p99_latency_ms']:.2f}")
+            _row(f"fig_handoff.throughput_ops.{s}",
+                 f"{r['throughput_ops']:.0f}",
+                 f"clients={r['clients']};"
+                 f"churn_events={r['churn_events']};"
+                 f"keys_moved={r['keys_moved']}")
+            _row(f"fig_handoff.leases.{s}",
+                 f"{r['leases_acquired']}",
+                 f"pulled={r['leases_pulled']};"
+                 f"redirected={r['leases_redirected']};"
+                 f"superseded={r['leases_superseded']};"
+                 f"pending={r['leases_pending']}")
+            _row(f"fig_handoff.walltime_s.{s}", f"{r['walltime_s']:.2f}")
+            _HANDOFF_ROWS.append({k: (round(v, 4)
+                                      if isinstance(v, float) else v)
+                                  for k, v in r.items()})
+    _write_handoff_json()
 
 
 def bench_fig_scale():
@@ -408,6 +447,7 @@ def main() -> None:
     _timed("sweep", bench_sweep)
     _timed("fig_churn", bench_fig_churn)
     _timed("fig_failover", bench_fig_failover)
+    _timed("fig_handoff", bench_fig_handoff)
     _timed("fig_scale", bench_fig_scale)
     _timed("headline_claims", bench_headline_claims)
     _timed("fig5_6", bench_fig5_6_locality)

@@ -11,6 +11,7 @@ from .kvstore import (EdgeGroup, EdgeKVCluster, GatewayNode, StorageModule,
                       OpResult, LOCAL, GLOBAL)
 from .cache import LRUCache, EdgeDataCache
 from .backup import assign_backup_groups, backup_lag
+from .lease import LeaseTable, MigrationLease, OUTCOMES as LEASE_OUTCOMES
 
 __all__ = [
     "ChordRing", "stable_hash", "RaftNode", "LocalCluster",
@@ -18,4 +19,5 @@ __all__ = [
     "EdgeGroup", "EdgeKVCluster", "GatewayNode", "StorageModule",
     "OpResult", "LOCAL", "GLOBAL", "LRUCache", "EdgeDataCache",
     "assign_backup_groups", "backup_lag",
+    "LeaseTable", "MigrationLease", "LEASE_OUTCOMES",
 ]

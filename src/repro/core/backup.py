@@ -41,6 +41,8 @@ def desired_backup_chains(cluster: "EdgeKVCluster") -> Dict[str, List[str]]:
         return desired
     depth = cluster._backup_depth
     for gid, gw_id in cluster.gateway_of_group.items():
+        if gw_id not in cluster.ring.nodes:
+            continue  # draining group: off the overlay, keeps no backups
         chain = [cluster.gateways[gw].group.id
                  for gw in cluster.ring.successor_groups(gw_id, depth)]
         if chain:
@@ -82,7 +84,8 @@ def backup_lag(cluster: "EdgeKVCluster", gid: str) -> int:
 
 
 # ------------------------------------------------------------ promotion
-def promote_backup(cluster: "EdgeKVCluster", dead_gid: str) -> int:
+def promote_backup(cluster: "EdgeKVCluster", dead_gid: str, *,
+                   async_handoff: bool = False) -> int:
     """Crash-recovery promotion of a dead group's surviving mirror.
 
     1. Pick the most advanced live learner of the dead group (max Raft
@@ -97,17 +100,24 @@ def promote_backup(cluster: "EdgeKVCluster", dead_gid: str) -> int:
     3. Re-home global keys to their current ring owners through those
        owners' Raft logs with the linearizable read barrier. A key the
        new owner already holds was written *after* the crash and wins
-       (the mirror copy is older by construction).
+       (the mirror copy is older by construction); a key the new owner
+       *deleted* during the unavailability window carries a per-key
+       tombstone (``cluster.tombstones``) that wins too — the mirror copy
+       must not resurrect it. With ``async_handoff=True`` the surviving
+       values are frozen onto *staged* migration leases instead of pushed
+       synchronously (reads pull on demand, ``step_handoff`` drains the
+       rest).
     4. Adopt local data into the promoting group under
        ``"<dead_gid>::<key>"`` committed through its Raft, and record the
        redirect so ``client_group=dead_gid`` local ops keep working.
 
-    Returns the number of re-homed global keys.
+    Returns the number of re-homed (or staged-leased) global keys.
     """
     from .kvstore import StorageModule
 
     group, chain = cluster.dead_groups[dead_gid]
-    host_gid = next((b for b in chain if b in cluster.groups), None)
+    host_gid = next((b for b in chain if b in cluster.groups
+                     and b not in cluster.draining), None)
     if host_gid is None:
         raise RuntimeError(
             f"cannot recover {dead_gid!r}: no member of its backup chain "
@@ -132,18 +142,37 @@ def promote_backup(cluster: "EdgeKVCluster", dead_gid: str) -> int:
     for _, cmd in donor.log[donor.last_applied:]:
         promoted.apply(cmd)
 
+    job = cluster._start_job("recover", dead_gid) if async_handoff else None
     moved = 0
     for key, val in promoted.stores[GLOBAL].items():
+        ts = cluster.tombstones.get(key)
+        if ts and dead_gid in ts:
+            continue  # deleted at the new owner post-crash: tombstone wins
         owner_gw = cluster.ring.locate(key)
         dest = cluster.gateways[owner_gw].group
         check = dest.get(GLOBAL, key, linearizable=True)
         if check.ok and check.value is not None:
             continue  # post-crash write at the new owner wins
+        if async_handoff:
+            # stage the surviving value on a lease to its ring owner: the
+            # value rides on the lease (the mirror is consumed below)
+            cluster._acquire_lease(key, None, dest.id, job, value=val,
+                                   staged=True)
+            moved += 1
+            continue
         dest.put(GLOBAL, key, val)
         verify = dest.get(GLOBAL, key, linearizable=True)
         if not verify.ok or verify.value != val:  # pragma: no cover
             raise RuntimeError(f"promotion verification failed for {key!r}")
         moved += 1
+    # this dead group's promotion is decided: its tag on every tombstone
+    # is consumed (a tombstone outlives only the promotions it guards)
+    for key in list(cluster.tombstones):
+        cluster.tombstones[key].discard(dead_gid)
+        if not cluster.tombstones[key]:
+            del cluster.tombstones[key]
+    if job is not None:
+        cluster._maybe_finalize(job)
 
     for key, val in promoted.stores[LOCAL].items():
         host.put(LOCAL, f"{dead_gid}{PROMOTED_SEP}{key}", val)

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from .hashring import ChordRing
+from .lease import LeaseTable, MigrationLease
 from .raft import LocalCluster
 
 LOCAL, GLOBAL = "local", "global"
@@ -272,6 +273,18 @@ class EdgeKVCluster:
         self.dead_groups: Dict[str, Tuple[EdgeGroup, List[str]]] = {}
         # dead gid -> live gid now serving its promoted local data
         self.promoted_local: Dict[str, str] = {}
+        # ------- async handoff state (per-key migration leases) -------
+        self.leases = LeaseTable()
+        # key -> set of dead gids whose pending mirror promotion must NOT
+        # resurrect it: the key was deleted at its (new) owner during the
+        # unavailability / migration window, and the delete wins
+        self.tombstones: Dict[str, set] = {}
+        # async handoff jobs: job id -> bookkeeping; a job finalizes (e.g.
+        # actually dropping a drained group) once its last lease resolves
+        self.handoff_jobs: Dict[int, dict] = {}
+        self._next_job = 0
+        self.draining: set = set()          # gids mid-async-drain
+        self._drain_via: Dict[str, str] = {}  # draining gw -> substitute gw
         for size in group_sizes:
             self._spawn_group(size, weight=1.0)
         self.backup_of: Dict[str, str] = {}        # gid -> first backup
@@ -301,7 +314,8 @@ class EdgeKVCluster:
             if gw.location_cache is not None:
                 gw.location_cache.invalidate()
 
-    def add_group(self, size: int, *, weight: float = 1.0) -> str:
+    def add_group(self, size: int, *, weight: float = 1.0,
+                  async_handoff: bool = False) -> str:
         """Join a new edge group + gateway at runtime (elastic scale-out).
 
         The gateway enters the Chord overlay (incremental finger update),
@@ -310,13 +324,25 @@ class EdgeKVCluster:
         the new group's Raft log, verified readable at the new owner, and
         only then deleted at the source — so no key is ever lost, and a key
         is double-owned only while the ring already routes to the new owner.
+
+        With ``async_handoff=True`` the moving keys are *leased* to the new
+        group instead of migrated in place: the ring routes to the new
+        owner immediately, client ops keep flowing (writes commit at the
+        destination and supersede the source copy, reads pull their key on
+        demand), and the bulk of the migration is driven incrementally by
+        :meth:`step_handoff`. Planned membership changes serialize behind
+        an in-flight handoff (only a crash interrupts one), so at most one
+        handoff job is ever active.
         """
+        self.drain_handoff()
         # Snapshot ownership BEFORE the ring changes. Leader stores hold
         # only keys their group authoritatively owns (§7.3 mirrors live in
         # backup_storage, never here); the locate() filter is defensive —
         # it keeps the handoff correct even if that invariant ever drifts.
         owned_before: List[Tuple[str, EdgeGroup]] = []
         for other_gw, gw in self.gateways.items():
+            if other_gw not in self.ring.nodes:
+                continue  # draining gateway: already off the ring
             src = gw.group
             lead = src.raft.run_until_leader()
             src.raft.step(0.0)  # read barrier: leader state is current
@@ -325,6 +351,16 @@ class EdgeKVCluster:
                 if self.ring.locate(k) == other_gw)
         gid, gw_id = self._spawn_group(size, weight=weight)
         self._invalidate_location_caches()
+        if async_handoff:
+            job = self._start_job("add", gid)
+            for key, src in owned_before:
+                if self.ring.locate(key) == gw_id and key not in self.leases:
+                    self._acquire_lease(key, src.id, gid, job)
+            self._rewire_backups()
+            self.migrations.append(("add-async", gid,
+                                    self.handoff_jobs[job]["leased"]))
+            self._maybe_finalize(job)
+            return gid
         moved = 0
         dest = self.groups[gid]
         for key, src in owned_before:
@@ -334,7 +370,7 @@ class EdgeKVCluster:
         self.migrations.append(("add", gid, moved))
         return gid
 
-    def remove_group(self, gid: str) -> int:
+    def remove_group(self, gid: str, *, async_handoff: bool = False) -> int:
         """Drain a group and leave the ring (elastic scale-in).
 
         Global keys the group owned are re-homed to their new successor
@@ -343,16 +379,28 @@ class EdgeKVCluster:
         to the surviving owners. Local data is group-scoped by definition
         (§3.2.5) and leaves with the group. Returns the number of keys
         migrated.
+
+        With ``async_handoff=True`` the drain is incremental: the gateway
+        leaves the overlay immediately and every owned global key is leased
+        to its new ring owner; the group object stays alive (serving lease
+        pulls and its clients' local data) until the last lease resolves,
+        at which point the group is finalized out of the cluster. Returns
+        the number of keys leased. Planned membership changes serialize
+        behind an in-flight handoff (see :meth:`add_group`).
         """
         if gid not in self.groups:
             raise KeyError(gid)
-        if len(self.groups) < 2:
+        if gid in self.draining:
+            raise RuntimeError(f"{gid!r} is already draining")
+        if len(self.groups) - len(self.draining) < 2:
             raise RuntimeError("cannot remove the last group")
+        self.drain_handoff()
         # abrupt-loss edge case: a draining group may hold the only
         # surviving mirror of a crashed group awaiting recovery — letting
         # it leave would destroy the last copy of acknowledged writes
         for dead_gid, (_, dead_chain) in self.dead_groups.items():
-            if not any(b in self.groups and b != gid for b in dead_chain):
+            if not any(b in self.groups and b != gid
+                       and b not in self.draining for b in dead_chain):
                 raise RuntimeError(
                     f"cannot remove {gid!r}: it holds the last surviving "
                     f"mirror of crashed group {dead_gid!r} — recover it "
@@ -377,8 +425,27 @@ class EdgeKVCluster:
         # only keys this gateway owns; mirrors live in backup_storage
         owned = [k for k in src.storage[lead.id].stores[GLOBAL]
                  if self.ring.locate(k) == gw_id]
+        substitute = (self.ring.successor_group(gw_id)
+                      if len(self.ring) >= 2 else None)
         self.ring.remove_node(gw_id)
         self._invalidate_location_caches()
+        if async_handoff:
+            # incremental drain: lease every owned key to its new ring
+            # owner; the group object outlives the membership change and
+            # is finalized once the last lease resolves
+            self.draining.add(gid)
+            if substitute is not None:
+                self._drain_via[gw_id] = substitute
+            job = self._start_job("remove", gid)
+            for key in owned:
+                if key not in self.leases:
+                    dest_gid = self.gateways[self.ring.locate(key)].group.id
+                    self._acquire_lease(key, gid, dest_gid, job)
+            self._rewire_backups()
+            leased = self.handoff_jobs[job]["leased"]
+            self.migrations.append(("remove-async", gid, leased))
+            self._maybe_finalize(job)
+            return leased
         moved = 0
         for key in owned:
             dest = self.gateways[self.ring.locate(key)].group
@@ -441,17 +508,24 @@ class EdgeKVCluster:
         """
         if gid not in self.groups:
             raise KeyError(gid)
-        if len(self.groups) < 2:
+        if gid in self.draining:
+            raise RuntimeError(
+                f"cannot crash {gid!r}: it is mid-drain (its gateway "
+                "already left the overlay; let the drain finish)")
+        if len(self.groups) - len(self.draining) < 2:
             raise RuntimeError(
                 f"cannot crash {gid!r}: it is the last live group")
         group = self.groups[gid]
         chain = list(self.backup_chain.get(gid, []))
         if self._backup_groups:
             # storage-level survivability: every dead group (including
-            # this victim) must keep >= 1 live backup holding its mirror
+            # this victim) must keep >= 1 live backup holding its mirror.
+            # A draining group doesn't count — it is leaving and its
+            # stores (mirrors included) die at finalize.
             for dead_gid, (_, dead_chain) in list(self.dead_groups.items()) \
                     + [(gid, (group, chain))]:
                 if not any(b in self.groups and b != gid
+                           and b not in self.draining
                            for b in dead_chain):
                     raise RuntimeError(
                         f"cannot crash {gid!r}: no surviving backup would "
@@ -471,6 +545,7 @@ class EdgeKVCluster:
         self.backup_chain.pop(gid, None)
         self.backup_of = {g: b for g, b in self.backup_of.items()
                           if b != gid}
+        self._crash_lease_fixups(gid)
         self._invalidate_location_caches()
         # live groups that used the dead group as a backup re-wire to the
         # ring's new successor rule right away (the dead group's own
@@ -479,7 +554,8 @@ class EdgeKVCluster:
         self.migrations.append(("crash", gid, 0))
         return gid
 
-    def recover_group(self, gid: str, *, stabilize: bool = True) -> int:
+    def recover_group(self, gid: str, *, stabilize: bool = True,
+                      async_handoff: bool = False) -> int:
         """§7.3 backup promotion for a crashed group; returns the number
         of re-homed global keys.
 
@@ -490,20 +566,217 @@ class EdgeKVCluster:
         current ring owners through those owners' Raft logs with the
         linearizable read barrier; a key the new owner already committed
         *after* the crash wins over the mirror copy (last-write-wins, no
-        rollback). Local data is promoted into the backup group under a
-        namespaced key range and stays addressable via the dead group id.
+        rollback); a key *deleted* at its new owner during the
+        unavailability window carries a tombstone that wins over the
+        mirror copy too. Local data is promoted into the backup group
+        under a namespaced key range and stays addressable via the dead
+        group id.
+
+        With ``async_handoff=True`` the re-homing half is leased instead
+        of pushed: each promoted value is frozen onto a *staged* lease to
+        its ring owner, reads pull their key on demand (shrinking the
+        per-key unavailability window), writes at the owner supersede the
+        stale mirror copy, and :meth:`step_handoff` drains the rest in
+        the background.
         """
         from .backup import promote_backup
         if gid not in self.dead_groups:
             raise KeyError(f"{gid!r} is not a crashed group pending "
                            "recovery")
-        moved = promote_backup(self, gid)
+        self.drain_handoff()  # membership changes serialize behind handoffs
+        moved = promote_backup(self, gid, async_handoff=async_handoff)
         if stabilize:
             while not self.ring.stabilized:
                 self.ring.stabilize()
                 self.ring.fix_fingers()
-        self.migrations.append(("recover", gid, moved))
+        self.migrations.append(
+            ("recover-async" if async_handoff else "recover", gid, moved))
         return moved
+
+    # ------------------------------------------------ async handoff driver
+    def _start_job(self, kind: str, gid: str) -> int:
+        job = self._next_job
+        self._next_job += 1
+        self.handoff_jobs[job] = dict(kind=kind, gid=gid, leased=0,
+                                      pending=0, resolved=0, done=False)
+        return job
+
+    def _acquire_lease(self, key: str, src: Optional[str], dst: str,
+                       job: Optional[int], *, value: Any = None,
+                       staged: bool = False) -> MigrationLease:
+        lease = self.leases.acquire(key, src, dst, job=job, value=value,
+                                    staged=staged)
+        if job is not None:
+            self.handoff_jobs[job]["leased"] += 1
+            self.handoff_jobs[job]["pending"] += 1
+        return lease
+
+    def _release_lease(self, lease: MigrationLease, outcome: str) -> None:
+        self.leases.release(lease.key, outcome)
+        job = lease.job
+        if job is None:
+            return
+        j = self.handoff_jobs[job]
+        j["pending"] -= 1
+        j["resolved"] += 1
+        self._maybe_finalize(job)
+
+    def _maybe_finalize(self, job: int) -> None:
+        j = self.handoff_jobs[job]
+        if j["pending"] or j["done"]:
+            return
+        j["done"] = True
+        if j["kind"] == "remove" and j["gid"] in self.groups:
+            self._finalize_remove(j["gid"])
+        self.migrations.append(("handoff", j["gid"], j["resolved"]))
+
+    def _finalize_remove(self, gid: str) -> None:
+        """Last lease of an async drain resolved: the group actually
+        leaves the cluster (its Raft stores now hold no global keys it
+        owned; local data left with it, §3.2.5)."""
+        gw_id = self.gateway_of_group[gid]
+        self.groups[gid].detach_learners()
+        del self.groups[gid]
+        del self.gateways[gw_id]
+        del self.gateway_of_group[gid]
+        self.draining.discard(gid)
+        self._drain_via.pop(gw_id, None)
+        self.backup_of = {g: b for g, b in self.backup_of.items()
+                          if g != gid and b != gid}
+        self.backup_chain = {g: c for g, c in self.backup_chain.items()
+                             if g != gid}
+        self._rewire_backups()
+
+    def step_handoff(self, max_keys: Optional[int] = None) -> int:
+        """Resolve up to ``max_keys`` pending leases (all by default) in
+        acquisition order — the incremental background half of the async
+        handoff. Returns the number of leases resolved. Safe to call at
+        any time; client ops may race it (a read may have pulled a lease
+        before this step reaches it)."""
+        resolved = 0
+        for lease in list(self.leases.active()):
+            if max_keys is not None and resolved >= max_keys:
+                break
+            if self.leases.get(lease.key) is not lease:
+                continue  # pulled by a concurrent read
+            self._resolve_lease(lease)
+            resolved += 1
+        return resolved
+
+    def drain_handoff(self) -> int:
+        """Resolve every pending lease (the atomic-membership entry points
+        call this first, so overlapping membership operations serialize
+        behind the in-flight handoff)."""
+        total = 0
+        while self.leases:
+            total += self.step_handoff()
+        return total
+
+    @property
+    def pending_handoff(self) -> int:
+        return len(self.leases)
+
+    def _resolve_lease(self, lease: MigrationLease) -> None:
+        """Complete or discard one lease from current state:
+
+        * tombstone — the delete at the destination won; drop the stale
+          source copy, never copy anything;
+        * dirty — a write at the destination superseded the source copy;
+          drop it;
+        * pending — migrate the value (linearizable read at the source —
+          or the staged mirror value — commit at the destination, verify
+          at a quorum, delete at the source).
+        """
+        src = self.groups.get(lease.src) if lease.src is not None else None
+        if lease.tombstone or lease.dirty:
+            if src is not None:
+                src.delete(GLOBAL, lease.key)
+            self._release_lease(
+                lease, "tombstone" if lease.tombstone else "superseded")
+            return
+        dest = self.groups[lease.dst]
+        if lease.staged:
+            val = lease.value
+        else:
+            val = src.get(GLOBAL, lease.key, linearizable=True).value
+        dest.put(GLOBAL, lease.key, val)
+        check = dest.get(GLOBAL, lease.key, linearizable=True)
+        if not check.ok or check.value != val:  # pragma: no cover - safety
+            raise RuntimeError(
+                f"lease handoff verification failed for {lease.key!r}")
+        if src is not None:
+            src.delete(GLOBAL, lease.key)
+        self._release_lease(lease, "copied")
+
+    def _crash_lease_fixups(self, gid: str) -> None:
+        """Deterministic lease resolution when ``gid`` crashes mid-handoff
+        (called from :meth:`crash_group`, after the ring flipped):
+
+        * destination crashed, lease dirty — the only fresh copy lived in
+          the dead group's Raft; its §7.3 mirrors re-home it at promotion.
+          The stale source copy is dropped NOW (it must not win), a
+          tombstoned delete is recorded against the dead group's pending
+          promotion, and the lease aborts.
+        * destination crashed, lease pending — the value never left the
+          source; the lease re-targets the key's new ring owner (or
+          collapses entirely if the ring now points back at the source).
+        * source crashed, lease dirty — the destination already holds the
+          authoritative value (or tombstone); release, recording the
+          tombstone against the source's pending promotion.
+        * source crashed, lease pending — the value survives only in the
+          source's mirrors; the lease aborts and promotion re-homes the
+          key to its ring owner (the destination) later.
+        """
+        if not self.leases:
+            return
+        for lease in list(self.leases.active()):
+            if lease.dst == gid:
+                if lease.dirty:
+                    src = (self.groups.get(lease.src)
+                           if lease.src is not None else None)
+                    if src is not None:
+                        src.delete(GLOBAL, lease.key)
+                    if lease.tombstone:
+                        self.tombstones.setdefault(lease.key, set()).add(gid)
+                    self._release_lease(lease, "aborted")
+                else:
+                    new_owner = self.gateways[
+                        self.ring.locate(lease.key)].group.id
+                    if new_owner == lease.src:
+                        self._release_lease(lease, "returned")
+                    else:
+                        self.leases.retarget(lease.key, new_owner)
+            elif lease.src == gid:
+                if lease.dirty:
+                    if lease.tombstone:
+                        self.tombstones.setdefault(lease.key, set()).add(gid)
+                    self._release_lease(
+                        lease,
+                        "tombstone" if lease.tombstone else "superseded")
+                else:
+                    self._release_lease(lease, "aborted")
+
+    def _complete_lease_read(self, lease: MigrationLease) -> None:
+        """A read hit a still-pending lease: complete this key's migration
+        *now* (the per-key read barrier), so the read below answers from
+        the authoritative destination. Dirty leases need nothing — the
+        destination is already authoritative."""
+        if lease.dirty or lease.tombstone:
+            return
+        self._resolve_lease(lease)
+
+    def _route_gateway(self, gw: "GatewayNode") -> "GatewayNode":
+        """Routing entry point for a client's gateway: a draining gateway
+        has left the overlay, so its clients route through the substitute
+        recorded at drain time (its then-successor), falling back to any
+        live ring member."""
+        if gw.id in self.ring.nodes:
+            return gw
+        sub = self._drain_via.get(gw.id)
+        if sub is not None and sub in self.ring.nodes:
+            return self.gateways[sub]
+        return next(g for g in self.gateways.values()
+                    if g.id in self.ring.nodes)
 
     def _rewire_backups(self) -> None:
         """Re-apply the §7.3 successor rule after a membership change.

@@ -19,11 +19,13 @@ Three layers, composable but independently usable:
   :meth:`EdgeKVCluster.recover_group`), with a recovery timeline for
   experiments and examples.
 """
-from .detector import (PhiAccrualDetector, detection_delay, phi_timeline,
+from .detector import (PhiAccrualDetector, detection_delay,
+                       false_positive_rate, phi_timeline, phi_trace,
                        suspicion_times)
 from .recovery import FailureCoordinator, RecoveryEvent
 
 __all__ = [
-    "PhiAccrualDetector", "detection_delay", "phi_timeline",
-    "suspicion_times", "FailureCoordinator", "RecoveryEvent",
+    "PhiAccrualDetector", "detection_delay", "false_positive_rate",
+    "phi_timeline", "phi_trace", "suspicion_times",
+    "FailureCoordinator", "RecoveryEvent",
 ]

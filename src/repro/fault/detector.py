@@ -70,6 +70,58 @@ def suspicion_times(heartbeat_times: Sequence[float], crash_time: float,
     return float(hb[-1]) + detection_delay(float(intervals.mean()), threshold)
 
 
+def phi_trace(arrivals: Sequence[float], times: Sequence[float],
+              window: int = 100) -> np.ndarray:
+    """Vectorized replay of a :class:`PhiAccrualDetector` fed ``arrivals``
+    (ascending heartbeat observation times) and queried at ``times``.
+
+    At query instant ``t`` the suspicion level uses the sliding
+    ``window``-mean of the inter-arrival intervals observed up to ``t``
+    and the elapsed time since the last arrival — exactly the stateful
+    detector's estimate, evaluated for a whole query grid in one numpy
+    expression (cumsum over intervals + one searchsorted). 0.0 before two
+    arrivals (no estimate, no suspicion).
+    """
+    a = np.asarray(arrivals, dtype=np.float64)
+    t = np.atleast_1d(np.asarray(times, dtype=np.float64))
+    phi = np.zeros(len(t))
+    if len(a) < 2:
+        return phi
+    iv = np.diff(a)
+    csum = np.concatenate([[0.0], np.cumsum(iv)])
+    last = np.searchsorted(a, t, side="right") - 1  # index of last arrival
+    ok = last >= 1
+    li = last[ok]
+    lo = np.maximum(li - window, 0)
+    mean = np.maximum((csum[li] - csum[lo]) / (li - lo), MIN_MEAN_S)
+    phi[ok] = np.maximum(t[ok] - a[li], 0.0) / mean * LOG10_E
+    return phi
+
+
+def false_positive_rate(arrivals: Sequence[float], *,
+                        threshold: float = 8.0, window: int = 100,
+                        resolution: float = 1e-3,
+                        until: Optional[float] = None) -> float:
+    """Fraction of query instants at which a detector observing
+    ``arrivals`` from a LIVE peer would (wrongly) suspect it.
+
+    The query grid sweeps ``[first arrival, until or last arrival)`` at
+    ``resolution`` — every decision the application could have made while
+    the peer was demonstrably alive (its beats kept coming). This is the
+    measurable counterpart of the model's one-in-10**phi error claim,
+    driven from simulated heartbeat traffic
+    (:meth:`repro.sim.cluster.SimEdgeKV.heartbeat_arrivals`).
+    """
+    a = np.asarray(arrivals, dtype=np.float64)
+    if len(a) < 2:
+        return 0.0
+    end = float(a[-1]) if until is None else float(until)
+    t = np.arange(float(a[0]), end, resolution)
+    if not len(t):
+        return 0.0
+    return float((phi_trace(a, t, window) >= threshold).mean())
+
+
 class PhiAccrualDetector:
     """Stateful per-peer detector: feed heartbeats, query suspicion.
 

@@ -151,6 +151,14 @@ class SimEdgeKV:
         # engines; mutated in place so the fast engine can hold the ref.
         self.unavailable: Dict[str, str] = {}
         self.lost_ops = 0  # reads served while their key was unavailable
+        # async handoff: per-key migration leases, key -> [src_gid,
+        # dst_gid, dirty]. A leased key's destination is authoritative
+        # from acquisition on; the value moves when a background release
+        # batch (or a read, pulling on demand) resolves the lease. Shared
+        # by both engines; mutated in place.
+        self.leases: Dict[str, list] = {}
+        self.handoff_stats = dict(leased=0, pulled=0, released=0,
+                                  redirects=0, superseded=0)
         # §7.2 gateway location cache (beyond-paper evaluation: the paper
         # proposes it as future work; we measure it)
         self.gw_cache: Dict[str, Any] = {}
@@ -179,14 +187,26 @@ class SimEdgeKV:
         return gid, gw
 
     # --------------------------------------------------------- elastic churn
-    def add_group(self, n: int = 3) -> Tuple[str, int]:
+    def add_group(self, n: int = 3, *,
+                  async_handoff: bool = False) -> Tuple[str, int]:
         """Join an elastic group mid-run; returns (gid, global keys moved).
 
         The gateway enters the ring immediately (incremental finger update);
         global state whose successor changed is handed to the new group's
         state machine. In-flight ops that already resolved an owner complete
         against it — exactly the window the core-layer read barrier covers.
+
+        With ``async_handoff=True`` the moving keys are *leased* to the new
+        group instead of transferred at the event: values stay at their
+        sources until :meth:`release_leases` (or a read pulling its key on
+        demand) resolves each lease — the count returned is keys leased.
+
+        Planned membership events serialize behind an in-flight handoff
+        (core-layer rule): leases still pending from an earlier event are
+        released first, so a lease's destination can never go stale.
         """
+        if self.leases:
+            self.release_leases()
         gid, gw = self._spawn_group(n)
         if self.gw_cache:
             from repro.core.cache import LRUCache
@@ -199,13 +219,19 @@ class SimEdgeKV:
                 continue
             store = g["state"].stores[GLOBAL]
             for key in [k for k in store if self.ring.locate(k) == gw]:
+                if async_handoff:
+                    if key not in self.leases:
+                        self.leases[key] = [other, gid, False]
+                        self.handoff_stats["leased"] += 1
+                        moved += 1
+                    continue
                 dest.apply(("put", GLOBAL, key, store[key]))
                 g["state"].apply(("delete", GLOBAL, key, None))
                 moved += 1
         self.churn_events.append((self.env.now, "add", gid, moved))
         return gid, moved
 
-    def remove_group(self, gid: str) -> int:
+    def remove_group(self, gid: str, *, async_handoff: bool = False) -> int:
         """Drain an elastic group mid-run; returns global keys moved.
 
         The group is *retired*, not deleted: its gateway leaves the ring so
@@ -214,6 +240,10 @@ class SimEdgeKV:
         in-flight writes re-home at apply time, see _group_write). Groups
         hosting load-generating clients cannot be drained — their workers
         would lose their local store.
+
+        With ``async_handoff=True`` the drain is incremental: every owned
+        key is leased to its new ring owner and the store empties as the
+        leases resolve (:meth:`release_leases`); returns keys leased.
         """
         g = self.groups[gid]
         if g["retired"]:
@@ -222,6 +252,8 @@ class SimEdgeKV:
             raise ValueError(f"cannot drain {gid}: load-generating clients attached")
         if len(self.ring) < 2:
             raise RuntimeError("cannot remove the last group")
+        if self.leases:
+            self.release_leases()  # serialize behind an in-flight handoff
         gw = self.gateway_of_group[gid]
         self.ring.remove_node(gw)
         g["retired"] = True
@@ -231,12 +263,44 @@ class SimEdgeKV:
         store = g["state"].stores[GLOBAL]
         for key in list(store):
             owner_gid = self.group_of_gateway[self.ring.locate(key)]
+            if async_handoff:
+                if key not in self.leases:
+                    self.leases[key] = [gid, owner_gid, False]
+                    self.handoff_stats["leased"] += 1
+                    moved += 1
+                continue
             self.groups[owner_gid]["state"].apply(
                 ("put", GLOBAL, key, store[key]))
             moved += 1
-        store.clear()
+        if not async_handoff:
+            store.clear()
         self.churn_events.append((self.env.now, "remove", gid, moved))
         return moved
+
+    def release_leases(self, max_keys: Optional[int] = None) -> int:
+        """Resolve up to ``max_keys`` pending leases (all by default) in
+        acquisition order — the background half of the async handoff. A
+        *dirty* lease (a client wrote at the destination while the key was
+        in flight) discards the stale source copy; a pending one moves the
+        value source -> destination and revalidates it if it was
+        unavailable. Returns the number of leases resolved."""
+        n = 0
+        for key in list(self.leases):
+            if max_keys is not None and n >= max_keys:
+                break
+            src, dst, dirty = self.leases.pop(key)
+            sstore = self.groups[src]["state"].stores[GLOBAL]
+            if dirty:
+                sstore.pop(key, None)
+                self.handoff_stats["superseded"] += 1
+            else:
+                val = sstore.pop(key, None)
+                if val is not None:
+                    self.groups[dst]["state"].stores[GLOBAL][key] = val
+                self.unavailable.pop(key, None)
+            self.handoff_stats["released"] += 1
+            n += 1
+        return n
 
     def _invalidate_gw_caches(self) -> None:
         self.churn_epoch += 1
@@ -252,20 +316,47 @@ class SimEdgeKV:
 
     def churn_proc(self, *, t_start: float = 0.1, period: float = 0.2,
                    adds: int = 2, group_size: int = 3,
-                   remove_added: bool = True) -> Generator:
+                   remove_added: bool = True, async_handoff: bool = False,
+                   lease_batch: int = 64,
+                   lease_period: float = 0.0) -> Generator:
         """Gateway churn driver: join ``adds`` elastic groups one per
         ``period``, then (optionally) drain them again — each membership
-        event pays its key-handoff transfer time before the next."""
+        event pays its key-handoff transfer time before the next.
+
+        With ``async_handoff=True`` each membership event *leases* its
+        keys and the driver releases them in ``lease_batch``-sized
+        background batches (one transfer time plus ``lease_period`` per
+        batch — a paced background migration), interleaved with client
+        traffic, instead of one atomic bulk transfer.
+        """
         yield Timeout(t_start)
         added: List[str] = []
         for _ in range(adds):
-            gid, moved = self.add_group(group_size)
+            gid, moved = self.add_group(group_size,
+                                        async_handoff=async_handoff)
             added.append(gid)
-            yield Timeout(self.handoff_time(moved) + period)
+            if async_handoff:
+                yield from self._drain_leases(lease_batch, lease_period)
+                yield Timeout(period)
+            else:
+                yield Timeout(self.handoff_time(moved) + period)
         if remove_added:
             for gid in added:
-                moved = self.remove_group(gid)
-                yield Timeout(self.handoff_time(moved) + period)
+                moved = self.remove_group(gid, async_handoff=async_handoff)
+                if async_handoff:
+                    yield from self._drain_leases(lease_batch, lease_period)
+                    yield Timeout(period)
+                else:
+                    yield Timeout(self.handoff_time(moved) + period)
+
+    def _drain_leases(self, batch: int, pause: float = 0.0) -> Generator:
+        """Background lease resolution: release pending leases in batches,
+        paying one bulk-transfer time (plus an optional pacing pause) per
+        batch. Client reads may race this, pulling individual keys on
+        demand first."""
+        while self.leases:
+            moved = self.release_leases(batch)
+            yield Timeout(self.handoff_time(moved) + pause)
 
     # -------------------------------------------------------- fault injection
     def crash_group(self, gid: str) -> int:
@@ -296,31 +387,77 @@ class SimEdgeKV:
         self.gw_cache.pop(gw, None)
         self._invalidate_gw_caches()
         store = g["state"].stores[GLOBAL]
+        if self.leases:
+            # deterministic mid-migration resolution (mirrors the core
+            # layer's crash fixups): a lease whose destination died either
+            # re-targets (value still at the live source) or dies with the
+            # destination's store; a lease whose source died leaves its
+            # pending value in the crashed store (swept to `unavailable`
+            # below) — except dirty leases, whose stale source copy is
+            # dropped NOW so it can't be counted unavailable or promoted.
+            for key, lease in list(self.leases.items()):
+                src, dst, dirty = lease
+                if dst == gid:
+                    if dirty:
+                        if not self.groups[src]["crashed"]:
+                            self.groups[src]["state"].stores[GLOBAL].pop(
+                                key, None)
+                        del self.leases[key]
+                        self.handoff_stats["released"] += 1
+                    else:
+                        new_owner = self.group_of_gateway[
+                            self.ring.locate(key)]
+                        if new_owner == src:
+                            del self.leases[key]
+                            self.handoff_stats["released"] += 1
+                        else:
+                            lease[1] = new_owner
+                elif src == gid:
+                    if dirty:
+                        store.pop(key, None)  # dst holds the fresh value
+                    del self.leases[key]
+                    self.handoff_stats["released"] += 1
         for key in store:
             self.unavailable[key] = gid
         self.churn_events.append((self.env.now, "crash", gid, len(store)))
         return len(store)
 
-    def recover_group(self, gid: str) -> int:
+    def recover_group(self, gid: str, *, async_handoff: bool = False) -> int:
         """Backup-group promotion of a crashed group's surviving mirror:
         its global keys re-home to their current ring owners (modeling
         the §7.3 learner-mirror handoff), except keys a client already
         re-wrote at the new owner — those are newer and win. Finishes the
         ring repair (stabilize + fix_fingers until clean). Returns the
-        number of promoted keys."""
+        number of promoted keys.
+
+        With ``async_handoff=True`` the surviving keys are *leased* to
+        their ring owners instead of bulk-promoted: a read pulls its key
+        on demand (ending that key's unavailability early), the rest
+        drain via :meth:`release_leases` — returns keys leased."""
         g = self.groups[gid]
         if not g["crashed"]:
             raise ValueError(f"{gid} is not a crashed group")
+        if self.leases:
+            self.release_leases()  # serialize behind an in-flight handoff
         moved = 0
         store = g["state"].stores[GLOBAL]
         for key in list(store):
-            if self.unavailable.pop(key, None) is None:
-                continue  # re-written at the live owner since the crash
+            if key not in self.unavailable:
+                if key not in self.leases:
+                    store.pop(key)  # re-written at the live owner: stale
+                continue
             owner_gid = self.group_of_gateway[self.ring.locate(key)]
+            if async_handoff:
+                if key not in self.leases:
+                    self.leases[key] = [gid, owner_gid, False]
+                    self.handoff_stats["leased"] += 1
+                    moved += 1
+                continue
+            self.unavailable.pop(key, None)
             self.groups[owner_gid]["state"].apply(
                 ("put", GLOBAL, key, store[key]))
+            store.pop(key)
             moved += 1
-        store.clear()
         g["crashed"] = False  # recovered (still retired: hosts are gone)
         while not self.ring.stabilized:
             self.ring.stabilize()
@@ -336,11 +473,52 @@ class SimEdgeKV:
         return [ev for ev in self.churn_events if ev[1] in ("crash",
                                                             "recover")]
 
+    def heartbeat_arrivals(self, *, duration: float, period: float = 0.05,
+                           jitter: float = 0.1, payload: int = 64,
+                           observer: Optional[str] = None,
+                           until: Optional[Dict[str, float]] = None,
+                           ) -> Dict[str, np.ndarray]:
+        """Seeded heartbeat arrival streams as a monitor gateway observes
+        them over this setting's gw-gw link (Table 3).
+
+        Each live gateway emits a heartbeat every ``period`` seconds with
+        seeded uniform send jitter of ``±jitter * period`` (one numpy
+        stream per gateway, a pure function of the sim seed); every beat
+        then pays the deterministic Table-3 gw-gw transfer of a
+        ``payload``-byte frame before the observer sees it. ``until`` cuts
+        a gateway's stream at its crash instant (beats sent after it are
+        never observed). This is the traffic a :class:`PhiAccrualDetector`
+        at ``observer`` consumes — the detector-from-traffic harness the
+        fault tests drive (false-positive bounds over real inter-arrival
+        noise instead of the closed-form delay).
+        """
+        if not 0.0 <= jitter < 0.5:
+            raise ValueError("jitter must be in [0, 0.5) to keep heartbeat"
+                             " send times monotone")
+        delay = self.net.xfer("gw_gw", payload)
+        out: Dict[str, np.ndarray] = {}
+        for gw in self.group_of_gateway:
+            if gw == observer:
+                continue
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [zlib.crc32(gw.encode()) & 0xFFFFFFFF,
+                 (self.seed + 1) & 0xFFFFFFFF, 0x48B]))
+            n = int(np.floor(duration / period)) + 1
+            send = (np.arange(n) * period
+                    + rng.uniform(-jitter, jitter, n) * period)
+            cut = (until or {}).get(gw)
+            if cut is not None:
+                send = send[send <= cut]
+            out[gw] = np.sort(send) + delay
+        return out
+
     def fault_proc(self, *, victims: Tuple[str, ...], t_crash: float = 0.1,
                    heartbeat_period: float = 5e-3,
                    phi_threshold: float = 8.0,
                    stabilize_period: float = 0.02,
-                   gap: float = 0.1) -> Generator:
+                   gap: float = 0.1, async_handoff: bool = False,
+                   lease_batch: int = 64,
+                   lease_period: float = 0.0) -> Generator:
         """Crash/recovery schedule driver (both engines).
 
         Each victim crashes, stays dark for the phi-accrual detection
@@ -349,7 +527,10 @@ class SimEdgeKV:
         contribution to the unavailability window), then pays one
         ``stabilize_period`` per stabilization round until the ring is
         clean, promotes the mirror, and pays the bulk-handoff transfer
-        for the promoted keys.
+        for the promoted keys. With ``async_handoff=True`` promotion is
+        leased instead of bulk: reads pull their keys on demand (per-key
+        unavailability ends early) while the driver drains the rest in
+        ``lease_batch``-sized background batches.
         """
         from repro.fault.detector import detection_delay
         yield Timeout(t_crash)
@@ -364,8 +545,12 @@ class SimEdgeKV:
                 # routes shorten as fingers heal: both engines re-resolve
                 self._invalidate_gw_caches()
                 yield Timeout(stabilize_period)
-            moved = self.recover_group(gid)
-            yield Timeout(self.handoff_time(moved) + gap)
+            moved = self.recover_group(gid, async_handoff=async_handoff)
+            if async_handoff:
+                yield from self._drain_leases(lease_batch, lease_period)
+                yield Timeout(gap)
+            else:
+                yield Timeout(self.handoff_time(moved) + gap)
 
     # ------------------------------------------------------------ group ops
     def _quorum_rtt(self, n: int, payload: int) -> float:
@@ -472,6 +657,41 @@ class SimEdgeKV:
                 if self.gw_cache and epoch == self.churn_epoch:
                     self.gw_cache[gw].put(op.key, owner_gw)
             owner_gid = self.group_of_gateway[owner_gw]
+            if self.leases:
+                lease = self.leases.get(op.key)
+                if lease is not None and owner_gid != lease[1]:
+                    # stale route (op resolved its owner before the
+                    # membership event): forward to the leaseholder —
+                    # one extra overlay hop, the redirect/retry cost
+                    # the async protocol pays instead of blocking
+                    self.handoff_stats["redirects"] += 1
+                    hops += 1
+                    owner_gid = lease[1]
+                    owner_gw = self.gateway_of_group[owner_gid]
+                    yield Timeout(self.net.xfer("gw_gw", req)
+                                  + self.service.gw_route_s)
+                    # the lease may have resolved during the hop
+                    lease = self.leases.get(op.key)
+                if lease is not None:
+                    if is_write:
+                        lease[2] = True  # destination write supersedes src
+                    elif not lease[2]:
+                        # pull-on-demand: the read completes this key's
+                        # migration (per-key read barrier) before serving.
+                        # The lease is claimed BEFORE the transfer yields,
+                        # so a concurrent reader can't double-pull it.
+                        self.handoff_stats["pulled"] += 1
+                        self.handoff_stats["released"] += 1
+                        del self.leases[op.key]
+                        src_store = self.groups[lease[0]]["state"] \
+                            .stores[GLOBAL]
+                        val = src_store.pop(op.key, None)
+                        if val is not None:
+                            self.groups[lease[1]]["state"] \
+                                .stores[GLOBAL][op.key] = val
+                        self.unavailable.pop(op.key, None)
+                        yield Timeout(self.net.xfer(
+                            "gw_gw", RECORD_BYTES + REQ_BYTES))
             yield Timeout(self.net.xfer("st_gw", req))  # gw -> group leader
             if is_write:
                 yield from self._group_write(owner_gid, op, GLOBAL)

@@ -218,6 +218,67 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
     return rows
 
 
+# ------------------------------------------------------------ fig handoff
+def fig_handoff(base_groups: int = 10, clients_per_group: int = 100,
+                ops_per_client: int = 2000, adds: int = 2,
+                p_global: float = 0.5, service: Optional[ServiceParams] = None,
+                seed: int = 0, engine: str = "fast") -> List[dict]:
+    """Async key handoff under live writes (beyond-paper scenario, ROADMAP
+    'handoff under live writes').
+
+    The *atomic* row migrates each membership event's keys in one bulk
+    transfer between client ops (the pre-lease behaviour); the *async* row
+    leases them instead: the ring flips immediately, writes supersede the
+    in-flight copy at the destination, reads pull their key on demand
+    (per-key read barrier), redirected in-flight ops pay one extra overlay
+    hop, and the driver releases the rest in background batches. Same
+    topology, load, and seeds — the rows differ only in the handoff
+    protocol.
+
+    Reported per row: mean/write/global-write latency, p95/p99 tails,
+    throughput, the membership schedule, and the lease counters (leased /
+    pulled / redirected / superseded) — the async protocol's abort-retry
+    accounting. A zipfian keyspace keeps reads landing on in-flight keys,
+    so the pull path is actually exercised at fig scale.
+    """
+    rows = []
+    for scenario in ("atomic", "async"):
+        sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                        service=service, seed=seed, engine=engine)
+        sim.env.process(sim.churn_proc(
+            t_start=0.05, period=0.1, adds=adds,
+            async_handoff=(scenario == "async"), lease_batch=8,
+            lease_period=0.02))
+        t0 = time.perf_counter()
+        sim.run_closed_loop(
+            threads_per_client=clients_per_group,
+            ops_per_client=ops_per_client,
+            workload_kw=dict(p_global=p_global, n_records=2000,
+                             distribution="zipfian"))
+        wall = time.perf_counter() - t0
+        st = sim.handoff_stats
+        rows.append(dict(
+            scenario=scenario, engine=engine,
+            clients=base_groups * clients_per_group,
+            write_latency_ms=1e3 * sim.mean_latency(kind="update"),
+            read_latency_ms=1e3 * sim.mean_latency(kind="read"),
+            global_write_latency_ms=1e3 * sim.mean_latency(
+                kind="update", dtype="global"),
+            p95_latency_ms=1e3 * sim.tail_latency(95),
+            p99_latency_ms=1e3 * sim.tail_latency(99),
+            throughput_ops=sim.throughput(),
+            churn_events=len(sim.churn_events),
+            keys_moved=sum(ev[3] for ev in sim.churn_events),
+            leases_acquired=st["leased"],
+            leases_pulled=st["pulled"],
+            leases_redirected=st["redirects"],
+            leases_superseded=st["superseded"],
+            leases_pending=len(sim.leases),
+            walltime_s=wall,
+        ))
+    return rows
+
+
 # ------------------------------------------------------------ fig failover
 def fig_failover(base_groups: int = 10, clients_per_group: int = 100,
                  ops_per_client: int = 2000, crash_groups: int = 2,

@@ -457,6 +457,10 @@ class _FastEngine:
         seek = dm.seek
         churn_events = sim.churn_events
         unavail = sim.unavailable  # shared ref, mutated in place by faults
+        leases = sim.leases        # shared ref, mutated by async handoff
+        hstats = sim.handoff_stats
+        group_code = sim.records._group_code
+        pull_xfer = sim.net.xfer("gw_gw", RECORD_BYTES + REQ_BYTES)
         home_memo, khash = self._home_memo, self._khash
         dynamic = self.dynamic
         pop, push = heapq.heappop, heapq.heappush
@@ -518,6 +522,43 @@ class _FastEngine:
                 arrival_phase[tau] = True
                 push(heap, (a, pid, tau))
                 continue
+            if leases and dtypes[i]:
+                # lease-resolution phase (third heap phase): a global op
+                # whose key is mid-migration resolves against the lease
+                # table at its leader-arrival instant — mirroring where
+                # the oracle's generator hits the lease hook
+                lease = leases.get(op_key[i])
+                if lease is not None:
+                    w = is_w[i]
+                    dst = group_code[lease[1]]
+                    if serving[i] != dst:
+                        # stale route: forward to the leaseholder (one
+                        # extra overlay hop), requeue at the new group
+                        hstats["redirects"] += 1
+                        self.hops[i] += 1
+                        serving[i] = dst
+                        prof = self._profile(
+                            (dtypes[i], w, False, self.hops[i],
+                             dst != self._l_client[i], self.n_of[dst]))
+                        op_svc[i], op_post[i] = prof[1], prof[2]
+                        push(heap, (a + dm.h_req[w], pid, tau))
+                        continue
+                    if w:
+                        lease[2] = True  # destination write supersedes src
+                    elif not lease[2]:
+                        # pull-on-demand: pay the transfer, complete this
+                        # key's migration, then requeue the read
+                        hstats["pulled"] += 1
+                        hstats["released"] += 1
+                        src_store = sim.groups[lease[0]]["state"] \
+                            .stores[GLOBAL]
+                        val = src_store.pop(op_key[i], None)
+                        if val is not None:
+                            stores[1][serving[i]][op_key[i]] = val
+                        unavail.pop(op_key[i], None)
+                        del leases[op_key[i]]
+                        push(heap, (a + pull_xfer, pid, tau))
+                        continue
             g = serving[i]
             # leader FIFO commit stage: the cumulative-max recurrence
             # dep = max(arrival, prev_departure) + service, online
@@ -751,10 +792,13 @@ def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
                      serving: np.ndarray, hops: np.ndarray,
                      key_idx: np.ndarray, keys: List[str],
                      is_w: np.ndarray, glob: np.ndarray,
-                     dtype: np.ndarray) -> None:
+                     dtype: np.ndarray,
+                     pen: Optional[np.ndarray] = None) -> None:
     """Resolve routes and apply writes for one churn epoch's ops (already
     in schedule order) against the *current* ring membership — the
-    open-loop analogue of the closed-loop engine's lazy ``_resolve``."""
+    open-loop analogue of the closed-loop engine's lazy ``_resolve``.
+    ``pen`` collects per-op delay penalties (lease pull transfers) that
+    feed into the arrival chain."""
     if not len(idxs):
         return
     ids = sim.records._group_ids
@@ -785,21 +829,42 @@ def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
             hops[gsel] = h
     # writes land at the group that serves them under this epoch's
     # membership; later joins/drains migrate them (§7 handoff semantics)
+    leases = sim.leases
     for i in idxs[is_w[idxs]].tolist():
         g = serving[i] if dtype[i] else client[i]
         tier = GLOBAL if dtype[i] else LOCAL
-        sim.groups[ids[g]]["state"].apply(
-            ("put", tier, keys[key_idx[i]], _VAL))
-    if sim.unavailable:
-        # fault window: walk this epoch's ops in schedule order — a
-        # global write re-validates its key, a global read of a
-        # still-unavailable key counts as lost (oracle semantics, batched
-        # per membership epoch)
+        key = keys[key_idx[i]]
+        if leases and dtype[i]:
+            lease = leases.get(key)
+            if lease is not None:
+                lease[2] = True  # destination write supersedes the source
+        sim.groups[ids[g]]["state"].apply(("put", tier, key, _VAL))
+    if sim.unavailable or leases:
+        # fault/handoff window: walk this epoch's ops in schedule order —
+        # a global write re-validates its key, a read of a still-pending
+        # lease pulls it on demand (paying the transfer as an arrival
+        # penalty), a global read of a still-unavailable key counts as
+        # lost (oracle semantics, batched per membership epoch)
         unavail = sim.unavailable
+        pull_xfer = sim.net.xfer("gw_gw", RECORD_BYTES + REQ_BYTES)
         for i in idxs.tolist():
             if not glob[i]:
                 continue
             k = keys[key_idx[i]]
+            if leases and not is_w[i]:
+                lease = leases.get(k)
+                if lease is not None and not lease[2]:
+                    sim.handoff_stats["pulled"] += 1
+                    sim.handoff_stats["released"] += 1
+                    if pen is not None:
+                        pen[i] += pull_xfer
+                    src_store = sim.groups[lease[0]]["state"].stores[GLOBAL]
+                    val = src_store.pop(k, None)
+                    if val is not None:
+                        sim.groups[lease[1]]["state"].stores[GLOBAL][k] = val
+                    unavail.pop(k, None)
+                    del leases[k]
+                    continue
             if is_w[i]:
                 unavail.pop(k, None)
             elif k in unavail:
@@ -864,6 +929,7 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     serving = client.copy()
     hops = np.zeros(n_ops, dtype=np.int32)
 
+    pen = np.zeros(n_ops) if aux else None
     if aux:
         # membership-event segmentation: ops whose gateway *lookup* lands
         # before an aux event route (and commit writes) under the
@@ -881,7 +947,7 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
             te, pid = heapq.heappop(heap)
             end = int(np.searchsorted(t_sorted, te, side="left"))
             _route_and_apply(sim, order_t[pos:end], client, serving, hops,
-                             key_idx, keys, is_w, glob, dtype)
+                             key_idx, keys, is_w, glob, dtype, pen)
             pos = end
             sim.env.now = te
             gen = aux[pid]
@@ -895,7 +961,7 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                                     "only yield Timeout")
                 heapq.heappush(heap, (te + ev.delay, pid))
         _route_and_apply(sim, order_t[pos:], client, serving, hops,
-                         key_idx, keys, is_w, glob, dtype)
+                         key_idx, keys, is_w, glob, dtype, pen)
         if not n_ops:
             return
     elif glob.any():
@@ -937,6 +1003,10 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     arr = arrival_chain(np, t0, by_w(dm.c_req), by_w(dm.f_req),
                         by_w(dm.sg_req), by_w(dm.h_req), lf, glob, hops,
                         int(hops.max()) if n_ops else 0)
+    if pen is not None:
+        # lease pull transfers delay the leader arrival of the reads that
+        # completed a key's migration on demand (async handoff)
+        arr = arr + pen
 
     # leader stage: per-group LRU replay + max-plus departure scan in
     # arrival order (writes were already applied per epoch under churn)

@@ -250,6 +250,57 @@ def test_recover_unknown_or_live_group_raises():
         c.recover_group("nope")
 
 
+def test_delete_during_unavailability_window_survives_promotion():
+    """Regression (ROADMAP fault follow-on): a key owned by a crashed
+    group, deleted at its NEW ring owner during the unavailability
+    window, must stay deleted after the §7.3 mirror promotes — the
+    per-key tombstone wins over the (older) mirror copy. On pre-tombstone
+    code the mirror copy resurrected: the new owner held nothing, so
+    promotion saw `value is None` and pushed the stale value back."""
+    c = EdgeKVCluster([3] * 4, seed=12, backup_groups=True)
+    keys = _load(c)
+    _replicate(c)
+    victim = max(c.groups, key=lambda g: sum(
+        1 for k in keys
+        if c.gateways[c.ring.locate(k)].group.id == g))
+    vkeys = [k for k in keys
+             if c.gateways[c.ring.locate(k)].group.id == victim]
+    assert len(vkeys) >= 2
+    c.crash_group(victim)
+    survivor = next(iter(c.groups))
+    dead_key = vkeys[0]
+    assert c.delete(dead_key, GLOBAL, client_group=survivor).ok
+    del keys[dead_key]
+    c.recover_group(victim)
+    assert c.get(dead_key, GLOBAL, client_group=survivor).value is None, \
+        "deleted key resurrected from the promoted mirror"
+    assert dead_key not in c.tombstones  # consumed by the promotion
+    _assert_exact(c, keys, client_group=survivor)
+
+
+def test_delete_then_rewrite_during_window_not_suppressed():
+    """The dual guard: a delete followed by a fresh put during the window
+    must keep the NEW value (the put revokes the tombstone), and the
+    mirror copy still must not win."""
+    c = EdgeKVCluster([3] * 4, seed=13, backup_groups=True)
+    keys = _load(c)
+    _replicate(c)
+    victim = max(c.groups, key=lambda g: sum(
+        1 for k in keys
+        if c.gateways[c.ring.locate(k)].group.id == g))
+    vkeys = [k for k in keys
+             if c.gateways[c.ring.locate(k)].group.id == victim]
+    c.crash_group(victim)
+    survivor = next(iter(c.groups))
+    k = vkeys[0]
+    c.delete(k, GLOBAL, client_group=survivor)
+    assert c.put(k, "REBORN", GLOBAL, client_group=survivor).ok
+    keys[k] = "REBORN"
+    c.recover_group(victim)
+    assert c.get(k, GLOBAL, client_group=survivor).value == "REBORN"
+    _assert_exact(c, keys, client_group=survivor)
+
+
 # --------------------------------------------------------------- property
 @settings(max_examples=10, deadline=None)
 @given(st.lists(st.integers(0, 10_000), min_size=1, max_size=8),

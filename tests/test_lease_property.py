@@ -1,0 +1,195 @@
+"""Property suite for the async-handoff lease machinery.
+
+Two machines, >= 200 hypothesis examples each:
+
+* a **lease-table machine** driving random acquire / dirty / tombstone /
+  retarget / release sequences against :class:`repro.core.lease.LeaseTable`
+  — accounting and uniqueness invariants;
+* a **cluster interleaving machine** (the PR-4 membership machine extended
+  with async handoff): random interleavings of client writes/deletes with
+  add/remove/crash/stabilize/recover/step_handoff, leases in flight across
+  every membership event — invariants: zero lost acknowledged writes, zero
+  double-applied writes (exactly-one-owner), every lease eventually
+  released or aborted, refusals non-mutating.
+
+Runs under real hypothesis or the deterministic fallback shim in
+``tests/conftest.py``.
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EdgeKVCluster, GLOBAL
+from repro.core.lease import LeaseTable, OUTCOMES
+
+
+# ------------------------------------------------------ lease-table machine
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5),     # action
+                          st.integers(0, 9),     # key id
+                          st.integers(0, 3)),    # group id
+                min_size=1, max_size=30))
+def test_lease_table_machine(script):
+    """Random lease-table histories: at most one active lease per key,
+    strictly increasing seqs, monotone flags, exact outcome accounting."""
+    t = LeaseTable()
+    seen_seqs = set()
+    for action, kid, g in script:
+        key = f"K{kid}"
+        lease = t.get(key)
+        if action == 0:  # acquire
+            if lease is not None:
+                with pytest.raises(RuntimeError):
+                    t.acquire(key, f"g{g}", f"g{(g + 1) % 4}")
+            else:
+                lease = t.acquire(key, f"g{g}", f"g{(g + 1) % 4}")
+                assert lease.seq not in seen_seqs  # never reused
+                seen_seqs.add(lease.seq)
+        elif action == 1 and lease is not None:  # client write
+            lease.dirty = True
+        elif action == 2 and lease is not None:  # client delete
+            lease.dirty = True
+            lease.tombstone = True
+        elif action == 3 and lease is not None:  # crash retarget
+            if lease.dirty:
+                with pytest.raises(RuntimeError):
+                    t.retarget(key, f"g{g}")
+            else:
+                t.retarget(key, f"g{g}")
+                assert t.get(key).dst == f"g{g}"
+        elif action == 4 and lease is not None:  # release
+            outcome = OUTCOMES[(kid + g) % len(OUTCOMES)]
+            t.release(key, outcome)
+            assert t.get(key) is None
+        elif action == 5:  # staged acquire needs the staged flag
+            if lease is None:
+                with pytest.raises(ValueError):
+                    t.acquire(key, None, f"g{g}")
+                t.acquire(key, None, f"g{g}", value=kid, staged=True)
+                assert t.get(key).value == kid
+        # global invariants after every step
+        assert t.balanced()
+        active = list(t.active())
+        assert len({l.key for l in active}) == len(active)
+        assert [l.seq for l in active] == sorted(l.seq for l in active)
+    # staged acquires (action 5) don't record their seq above, so the
+    # table must have seen at least every tracked acquisition
+    assert t.stats["acquired"] >= len(seen_seqs)
+    assert t.balanced()
+
+
+# ------------------------------------------- cluster interleaving machine
+def _owners(c, keys):
+    holders = {k: [] for k in keys}
+    for g in c.groups.values():
+        lead = g.raft.run_until_leader()
+        store = g.storage[lead.id].stores[GLOBAL]
+        for k in keys:
+            if k in store:
+                holders[k].append(g.id)
+    return holders
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=8),
+       st.integers(0, 3))
+def test_cluster_interleavings_with_inflight_leases(seq, seed):
+    """Arbitrary interleavings of put/delete/get with async
+    add/remove/crash/recover/stabilize/step_handoff: after settling, no
+    acknowledged write is lost, nothing is double-applied (each key held
+    by exactly its ring owner), deleted keys stay deleted, every lease
+    was released or aborted, and every refused operation left the cluster
+    intact."""
+    c = EdgeKVCluster([1] * 3, seed=seed, backup_groups=True,
+                      backup_depth=2)
+    model = {}
+    deleted = set()
+    serial = 0
+    for i in range(10):  # small preload
+        k = f"K{i}"
+        gids = list(c.groups)
+        assert c.put(k, i, GLOBAL, client_group=gids[i % len(gids)]).ok
+        model[k] = i
+    for g in c.groups.values():
+        for _ in range(4):
+            g.raft.step()
+
+    def any_client():
+        return next(iter(c.groups))
+
+    for step in seq:
+        r = step % 8
+        live = [g for g in c.groups if g not in c.draining]
+        if r == 0:  # put (fresh or overwrite)
+            pool = sorted(model) + [f"w/{serial}"]
+            k = pool[step % len(pool)]
+            serial += 1
+            assert c.put(k, step, GLOBAL, client_group=any_client()).ok
+            model[k] = step
+            deleted.discard(k)
+        elif r == 1 and model:  # delete
+            k = sorted(model)[step % len(model)]
+            c.delete(k, GLOBAL, client_group=any_client())
+            model.pop(k)
+            deleted.add(k)
+        elif r == 2 and not c.dead_groups:
+            # linearizable read check (outside unavailability windows,
+            # where reads legitimately miss) — leases must still answer
+            pool = sorted(model) + sorted(deleted)
+            if pool:
+                k = pool[step % len(pool)]
+                got = c.get(k, GLOBAL, client_group=any_client()).value
+                assert got == model.get(k), (k, got, model.get(k))
+        elif r == 3 and len(c.groups) < 7:
+            c.add_group(1, async_handoff=bool(step & 1))
+        elif r == 4 and len(live) > 2:
+            victim = live[step % len(live)]
+            before = set(c.groups)
+            try:
+                c.remove_group(victim, async_handoff=bool(step & 1))
+            except RuntimeError:
+                assert set(c.groups) == before  # refusal non-mutating
+        elif r == 5 and len(live) > 2:
+            victim = live[step % len(live)]
+            before = set(c.groups)
+            pend = c.pending_handoff
+            try:
+                c.crash_group(victim)
+            except RuntimeError:
+                assert set(c.groups) == before
+                assert c.pending_handoff == pend
+        elif r == 6 and c.dead_groups:
+            c.recover_group(next(iter(c.dead_groups)),
+                            async_handoff=bool(step & 1))
+        elif r == 7:
+            if step & 1:
+                c.step_handoff(2)
+            else:
+                c.ring.stabilize()
+                c.ring.fix_fingers()
+        # a fresh acknowledged write survives whatever just happened
+        k = f"a/{serial}"
+        serial += 1
+        assert c.put(k, serial, GLOBAL, client_group=any_client()).ok
+        model[k] = serial
+        assert c.leases.balanced()
+
+    # settle: recover every pending crash, drain every lease
+    for gid in list(c.dead_groups):
+        c.recover_group(gid, async_handoff=bool(seed & 1))
+    c.drain_handoff()
+    while c.draining:  # a drain job may have been created by settling
+        c.drain_handoff()
+    assert c.pending_handoff == 0
+    assert c.leases.balanced()  # every lease released or aborted
+    assert c.ring.stabilized
+
+    survivor = next(iter(c.groups))
+    lost = {k for k, v in model.items()
+            if c.get(k, GLOBAL, client_group=survivor).value != v}
+    assert not lost, f"lost acknowledged writes: {sorted(lost)[:5]}"
+    resurrected = {k for k in deleted
+                   if c.get(k, GLOBAL, client_group=survivor).value
+                   is not None}
+    assert not resurrected, f"deletes lost: {sorted(resurrected)[:5]}"
+    for k, hs in _owners(c, model).items():
+        assert hs == [c.gateways[c.ring.locate(k)].group.id], (k, hs)

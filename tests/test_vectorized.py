@@ -152,6 +152,87 @@ def test_fast_churn_no_stranded_state():
             assert owner == gid, (gid, key, owner)
 
 
+def test_fast_async_handoff_closed_loop_tolerance():
+    """Concurrent migration (per-key leases) on the fast engine: the
+    lease-resolution phase must agree with the generator oracle within
+    the established 2% tolerance, with identical membership schedules,
+    all leases released, and no stranded state."""
+    from repro.core.kvstore import GLOBAL as G
+
+    churn = dict(t_start=0.05, period=0.1, adds=2, async_handoff=True,
+                 lease_batch=8, lease_period=0.01)
+    o, f = both(
+        dict(setting="edge", seed=1, group_sizes=(3,) * 6),
+        dict(threads_per_client=50, ops_per_client=500,
+             workload_kw=dict(p_global=0.7, n_records=400,
+                              distribution="zipfian")),
+        churn_kw=churn)
+    assert [e[1:3] for e in o.churn_events] == [e[1:3] for e in f.churn_events]
+    for kind in (None, "update", "read"):
+        mo, mf = o.mean_latency(kind=kind), f.mean_latency(kind=kind)
+        assert abs(mf - mo) / mo < 0.02, kind
+    assert abs(f.throughput() - o.throughput()) / o.throughput() < 0.02
+    for sim in (o, f):
+        assert not sim.leases
+        assert sim.handoff_stats["leased"] > 0
+        assert sim.handoff_stats["leased"] == sim.handoff_stats["released"]
+        for gid, g in sim.groups.items():
+            for key in g["state"].stores[G]:
+                owner = sim.group_of_gateway[sim.ring.locate(key)]
+                assert owner == gid, (sim.engine, gid, key, owner)
+
+
+def test_fast_async_handoff_open_loop_tolerance():
+    """Open loop + concurrent migration: lease pulls feed the arrival
+    chain as penalties; means must agree within 2% and the final state
+    must hold exactly-one-owner."""
+    from repro.core.kvstore import GLOBAL as G
+
+    def run(engine):
+        # one paced release batch per event: the engines' key censuses
+        # differ by in-flight ops, so a per-batch pause would quantize
+        # the membership schedule differently (ceil(n/batch) batches) —
+        # exactly the cross-engine drift the tolerance must not absorb
+        sim = SimEdgeKV(setting="edge", seed=1, group_sizes=(3,) * 6,
+                        engine=engine)
+        sim.env.process(sim.churn_proc(t_start=0.3, period=0.3, adds=2,
+                                       async_handoff=True, lease_batch=64,
+                                       lease_period=0.02))
+        sim.run_open_loop(rate_per_client=150, duration=4.0,
+                          workload_kw=dict(p_global=0.5, n_records=5000))
+        return sim
+
+    o, f = run("oracle"), run("fast")
+    assert [e[1:3] for e in o.churn_events] == [e[1:3] for e in f.churn_events]
+    for kind in (None, "update", "read"):
+        mo, mf = o.mean_latency(kind=kind), f.mean_latency(kind=kind)
+        assert abs(mf - mo) / mo < 0.02, kind
+    for sim in (o, f):
+        assert not sim.leases
+        assert sim.handoff_stats["leased"] > 0
+        for gid, g in sim.groups.items():
+            for key in g["state"].stores[G]:
+                owner = sim.group_of_gateway[sim.ring.locate(key)]
+                assert owner == gid, (sim.engine, gid, key, owner)
+
+
+def test_fast_membership_free_run_bit_exact_with_lease_machinery():
+    """Acceptance guard: the lease machinery must not perturb
+    membership-free runs — an async join fully drained BEFORE the load
+    leaves a membership-stable run, which stays bit-exact across
+    engines."""
+    sims = []
+    for engine in ("oracle", "fast"):
+        sim = SimEdgeKV(setting="edge", seed=3, group_sizes=(3,) * 4,
+                        engine=engine)
+        _, leased = sim.add_group(3, async_handoff=True)
+        assert sim.release_leases() == leased  # drained pre-run
+        sim.run_closed_loop(threads_per_client=20, ops_per_client=200,
+                            workload_kw=dict(p_global=0.6, n_records=500))
+        sims.append(sim)
+    assert_exact(*sims)
+
+
 def test_fast_gateway_cache_mode():
     """§7.2 location-cache runs stay close to the oracle (cache op order
     shifts to schedule time, so only statistical agreement is promised)."""
