@@ -1,0 +1,35 @@
+"""Static-analysis suite for the EdgeKV reproduction (``repro.analysis``).
+
+An AST-based lint pass purpose-built for this codebase's correctness
+story: the oracle-vs-fast differentials, the <2% cross-engine figures,
+and the hypothesis property machines all silently assume the stack is
+*deterministic* and *jit-pure*, and the protocol layer carries
+invariants (lease lifecycle, tombstone accounting) that example tests
+only probe dynamically.  This package checks those assumptions at diff
+time:
+
+* **EDK0xx — determinism** :mod:`repro.analysis.rules.determinism`:
+  process-salted ``hash()``, unordered iteration over ``set``-typed
+  protocol state, module-level global-RNG calls, wall-clock reads
+  inside virtual-time modules.
+* **EDK1xx — jit purity** :mod:`repro.analysis.rules.jitpurity`:
+  side effects and closure mutation inside jit-traced functions,
+  tracer-to-host coercions, data-dependent Python branches on traced
+  values, float64 outside the x64 guard.
+* **EDK2xx — protocol invariants** :mod:`repro.analysis.rules.protocol`:
+  the :class:`~repro.core.lease.MigrationLease` transition graph against
+  its declared spec, and tombstone insert/revoke pairing (the PR 5
+  delete-resurrection bug class).
+
+Run ``python -m repro.analysis src/repro`` (CI gates on exit 0); see
+:mod:`repro.analysis.engine` for the rule plugin protocol and the
+``# lint: ignore[RULE]`` suppression syntax.
+"""
+from __future__ import annotations
+
+from .engine import (Finding, Rule, RULES, analyze_paths, iter_py_files,
+                     register)
+from . import rules as _rules  # noqa: F401  (registers the rule plugins)
+
+__all__ = ["Finding", "Rule", "RULES", "analyze_paths", "iter_py_files",
+           "register"]

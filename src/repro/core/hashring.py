@@ -17,7 +17,7 @@ from __future__ import annotations
 import bisect
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 BITS = 64
 RING_SIZE = 1 << BITS
@@ -75,7 +75,7 @@ class ChordRing:
         # by finger tables and successor lists, but owner-less and skipped
         # by routing (a live Chord node times out on them and tries the
         # next finger / successor-list entry)
-        self._dead: set = set()
+        self._dead: Set[int] = set()
         # churn instrumentation: tests assert add/remove never trigger a
         # from-scratch rebuild once the incremental path is in place
         self.finger_rebuilds = 0

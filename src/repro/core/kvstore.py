@@ -20,7 +20,7 @@ exercised by :mod:`repro.sim`.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from .hashring import ChordRing
 from .lease import LeaseTable, MigrationLease
@@ -278,12 +278,12 @@ class EdgeKVCluster:
         # key -> set of dead gids whose pending mirror promotion must NOT
         # resurrect it: the key was deleted at its (new) owner during the
         # unavailability / migration window, and the delete wins
-        self.tombstones: Dict[str, set] = {}
+        self.tombstones: Dict[str, Set[str]] = {}
         # async handoff jobs: job id -> bookkeeping; a job finalizes (e.g.
         # actually dropping a drained group) once its last lease resolves
         self.handoff_jobs: Dict[int, dict] = {}
         self._next_job = 0
-        self.draining: set = set()          # gids mid-async-drain
+        self.draining: Set[str] = set()     # gids mid-async-drain
         self._drain_via: Dict[str, str] = {}  # draining gw -> substitute gw
         for size in group_sizes:
             self._spawn_group(size, weight=1.0)

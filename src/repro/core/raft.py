@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 FOLLOWER, CANDIDATE, LEADER, LEARNER = "follower", "candidate", "leader", "learner"
 
@@ -96,11 +96,11 @@ class RaftNode:
         # leader state
         self.next_index: Dict[str, int] = {}
         self.match_index: Dict[str, int] = {}
-        self.votes: set = set()
+        self.votes: Set[str] = set()
 
         self.election_deadline = 0.0
         self.heartbeat_due = 0.0
-        self.voter_ids: set = set()  # filled by cluster wiring
+        self.voter_ids: Set[str] = set()  # filled by cluster wiring
         self.applied: List[Any] = []  # applied commands, in order
 
     # ------------------------------------------------------------- helpers
@@ -319,7 +319,7 @@ class LocalCluster:
         for n in self.nodes.values():
             n.voter_ids = voters
         self.now = 0.0
-        self.down: set = set()
+        self.down: Set[str] = set()
         for n in self.nodes.values():
             n.start(self.now)
 

@@ -49,7 +49,7 @@ from __future__ import annotations
 import random
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -141,7 +141,7 @@ class SimEdgeKV:
             self._spawn_group(n)
         self.client_spans: Dict[str, List[float]] = {}
         self.client_ops: Dict[str, int] = {}
-        self.client_groups: set = set()  # groups hosting load generators
+        self.client_groups: Set[str] = set()  # groups hosting load generators
         # churn log: (virtual time, "add"|"remove"|"crash"|"recover", gid,
         # keys moved)
         self.churn_events: List[Tuple[float, str, str, int]] = []

@@ -35,7 +35,7 @@ class NetworkModel:
     def __init__(self, links: Dict[str, Link]):
         missing = set(self.KINDS) - set(links)
         if missing:
-            raise ValueError(f"missing link kinds: {missing}")
+            raise ValueError(f"missing link kinds: {sorted(missing)}")
         self.links = links
 
     def xfer(self, kind: str, nbytes: float) -> float:

@@ -1,0 +1,11 @@
+"""True positive: PR 2's replay bug — open-loop arrival streams seeded
+from the process-salted builtin ``hash()``."""
+import numpy as np
+
+
+def arrival_seed(sim_seed, gid):
+    return hash(gid) ^ sim_seed
+
+
+def make_stream(sim_seed, gid):
+    return np.random.default_rng(arrival_seed(sim_seed, gid))

@@ -1,0 +1,22 @@
+"""Near miss: sorted() iteration, and a *list* that merely shares its
+name with another function's set (scoped inference must not retype it).
+"""
+
+
+class Ring:
+    def __init__(self):
+        self._dead: set = set()
+
+    def repair_order(self):
+        return [vh for vh in sorted(self._dead)]
+
+
+def finger_repair(vhashes):
+    removed = set(vhashes)
+    return sorted(removed)
+
+
+def remove_node(entries):
+    removed = list(entries)
+    for vh in removed:
+        yield vh

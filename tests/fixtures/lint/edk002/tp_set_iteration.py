@@ -1,0 +1,17 @@
+"""True positive: protocol state held in sets reaching iteration order
+(migration order, error text)."""
+
+
+class Ring:
+    def __init__(self):
+        self._dead: set = set()
+        self.draining = set()
+
+    def repair_order(self):
+        out = []
+        for vh in self._dead:
+            out.append(vh)
+        return out
+
+    def render(self):
+        return f"draining: {self.draining}"

@@ -1,0 +1,10 @@
+"""Near miss: explicit seeded generator instances."""
+import random
+
+import numpy as np
+
+
+def jitter(seed):
+    rng = random.Random(seed)
+    g = np.random.default_rng(seed)
+    return rng.random() + g.uniform()

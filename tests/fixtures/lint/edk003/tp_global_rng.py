@@ -1,0 +1,13 @@
+"""True positive: draws from the hidden process-global RNG streams."""
+import random
+
+import numpy as np
+
+
+def jitter():
+    return random.random() + np.random.uniform()
+
+
+def reseed(seed):
+    random.seed(seed)
+    np.random.seed(seed)

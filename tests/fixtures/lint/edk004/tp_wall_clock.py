@@ -1,0 +1,6 @@
+"""True positive: wall-clock read feeding virtual-time arithmetic."""
+import time
+
+
+def sample_arrival(env):
+    return env.now + time.time() % 1.0

@@ -1,0 +1,23 @@
+"""Near miss: the Pallas kernel idiom — ref stores hit *parameters* of
+the traced kernel (including from a nested @pl.when body), which are
+locals of the traced scope, not closure mutation."""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, o_ref, carry_ref):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    o_ref[...] = a_ref[...] + carry_ref[...]
+    carry_ref[...] = o_ref[...]
+
+
+def scan(a, out_shape):
+    return pl.pallas_call(functools.partial(_kernel),
+                          out_shape=out_shape)(a)

@@ -1,0 +1,14 @@
+"""True positive: jit-traced function appending into a module-level
+list — runs once at trace time, silently, not per call."""
+import jax
+import jax.numpy as jnp
+
+TRACE_LOG = []
+
+
+@jax.jit
+def accumulate(x):
+    y = jnp.sum(x)
+    TRACE_LOG.append(y)
+    print(y)
+    return y

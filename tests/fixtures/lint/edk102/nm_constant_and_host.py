@@ -1,0 +1,13 @@
+"""Near miss: float() on a literal is trace-safe, and .item() outside
+any traced function is plain host code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scaled(x):
+    return x * float(2)
+
+
+def host_read(x):
+    return jnp.sum(x).item()

@@ -1,0 +1,8 @@
+"""True positive: concretizing a tracer to a host scalar under jit."""
+import jax
+
+
+@jax.jit
+def mean_to_float(x):
+    total = x.sum()
+    return float(total)

@@ -1,0 +1,16 @@
+"""Near miss: branches on static_argnames config, is-None checks, and
+trace-static shape attributes are legal Python control flow."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("negate",))
+def flip(x, bias=None, negate=False):
+    if negate:
+        x = -x
+    if bias is None:
+        return x
+    if x.ndim == 2:
+        return x + bias
+    return x + bias[0]

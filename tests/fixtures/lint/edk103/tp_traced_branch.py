@@ -1,0 +1,9 @@
+"""True positive: Python branch on a traced argument."""
+import jax
+
+
+@jax.jit
+def clamp(x):
+    if x > 0:
+        return x
+    return -x

@@ -1,0 +1,7 @@
+"""True positive: requesting float64 from jax without the x64 guard —
+silently truncates to float32."""
+import jax.numpy as jnp
+
+
+def widen(x):
+    return jnp.asarray(x, dtype=jnp.float64)

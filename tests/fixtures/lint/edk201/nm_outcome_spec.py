@@ -1,0 +1,25 @@
+"""Near miss: full five-outcome spec, every outcome reachable at a
+release literal site (including both arms of the conditional)."""
+OUTCOMES = ("copied", "superseded", "tombstone", "returned", "aborted")
+
+
+class LeaseTable:
+    def __init__(self):
+        self._leases = {}
+
+    def release(self, key, outcome):
+        if outcome not in OUTCOMES:
+            raise ValueError(outcome)
+        self._leases.pop(key)
+
+
+def resolve(table, lease):
+    if lease.aborted:
+        table.release(lease.key, "aborted")
+    elif lease.returned:
+        table.release(lease.key, "returned")
+    elif lease.resolved:
+        table.release(lease.key,
+                      "tombstone" if lease.tombstone else "superseded")
+    else:
+        table.release(lease.key, "copied")

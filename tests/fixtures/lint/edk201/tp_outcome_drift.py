@@ -1,0 +1,19 @@
+"""True positive: the declared OUTCOMES drifts from the lease lifecycle
+spec (tombstone is missing), and a release site uses an undeclared
+outcome literal."""
+OUTCOMES = ("copied", "superseded", "returned", "aborted")
+
+
+class LeaseTable:
+    def __init__(self):
+        self._leases = {}
+
+    def release(self, key, outcome):
+        if outcome not in OUTCOMES:
+            raise ValueError(outcome)
+        self._leases.pop(key)
+
+
+def resolve(table, key):
+    table.release(key, "copied")
+    table.release(key, "expired")

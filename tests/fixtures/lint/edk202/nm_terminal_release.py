@@ -1,0 +1,19 @@
+"""Near miss: mutation before release and reads after release are both
+fine; release() pops the active entry."""
+OUTCOMES = ("copied", "superseded", "tombstone", "returned", "aborted")
+
+
+class LeaseTable:
+    def __init__(self):
+        self._leases = {}
+
+    def release(self, lease, outcome):
+        if outcome not in OUTCOMES:
+            raise ValueError(outcome)
+        self._leases.pop(lease)
+
+
+def settle(table, lease):
+    lease.dirty = False
+    table.release(lease, "copied")
+    return lease.key

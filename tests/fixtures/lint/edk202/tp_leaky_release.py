@@ -1,0 +1,13 @@
+"""True positive: release() validates the outcome but never removes the
+lease from the active table — the terminal state is not absorbing."""
+OUTCOMES = ("copied", "superseded", "tombstone", "returned", "aborted")
+
+
+class LeaseTable:
+    def __init__(self):
+        self._outcomes = {}
+
+    def release(self, key, outcome):
+        if outcome not in OUTCOMES:
+            raise ValueError(outcome)
+        self._outcomes[key] = outcome

@@ -1,0 +1,17 @@
+"""True positive: a lease object is retargeted after being released in
+the same block — terminal states must be absorbing."""
+OUTCOMES = ("copied", "superseded", "tombstone", "returned", "aborted")
+
+
+class LeaseTable:
+    def __init__(self):
+        self._leases = {}
+
+    def release(self, lease, outcome):
+        self._leases.pop(lease)
+
+
+def settle(table, lease, dst):
+    table.release(lease, "copied")
+    lease.dirty = True
+    lease.retarget(dst)

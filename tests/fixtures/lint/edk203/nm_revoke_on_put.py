@@ -1,0 +1,12 @@
+"""Near miss: the PR 5 fix — a fresh write revokes any pending
+tombstone for the key before storing."""
+
+
+def resource_put(cluster, key, value):
+    cluster.tombstones.pop(key, None)
+    cluster.store[key] = value
+
+
+def resource_delete(cluster, key):
+    cluster.store.pop(key, None)
+    cluster.tombstones.setdefault(key, set()).update(cluster.dead_groups)

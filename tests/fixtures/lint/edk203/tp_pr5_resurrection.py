@@ -1,0 +1,12 @@
+"""True positive: PR 5's delete-resurrection bug — deletes record
+tombstones but no put-named function revokes them, so a fresh write
+after a delete resurrects the delete on crash replay."""
+
+
+def resource_put(cluster, key, value):
+    cluster.store[key] = value
+
+
+def resource_delete(cluster, key):
+    cluster.store.pop(key, None)
+    cluster.tombstones.setdefault(key, set()).update(cluster.dead_groups)

@@ -1,0 +1,215 @@
+"""Tests for repro.analysis — the rule engine, golden fixtures, the
+suppression syntax, and the CLI.
+
+The golden fixtures under ``tests/fixtures/lint/<rule>/`` are the
+regression contract: each rule has at least one committed true positive
+(``tp_*.py``) that must keep producing a finding — including the two
+historical bugs (PR 2's ``hash(gid)`` seeding, PR 5's missing tombstone
+revoke-on-put) — and at least one near miss (``nm_*.py``) that must stay
+silent, so rule tightening and loosening both fail loudly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, analyze_paths
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+SRC_REPRO = REPO / "src" / "repro"
+
+
+def _rule_findings(path, rule):
+    return [f for f in analyze_paths([path], select={rule})
+            if f.rule == rule]
+
+
+def _fixture_cases():
+    cases = []
+    for ruledir in sorted(FIXTURES.iterdir()):
+        rule = ruledir.name.upper()
+        for f in sorted(ruledir.glob("*.py")):
+            cases.append((rule, f, f.name.startswith("tp_")))
+    return cases
+
+
+# ------------------------------------------------------------ golden fixtures
+@pytest.mark.parametrize(
+    "rule,path,positive", _fixture_cases(),
+    ids=[f"{r}-{p.name}" for r, p, _ in _fixture_cases()])
+def test_fixture(rule, path, positive):
+    hits = _rule_findings(path, rule)
+    if positive:
+        assert hits, f"{path.name} must trigger {rule}"
+        for f in hits:
+            assert f.rule == rule
+            assert f.path.endswith(path.name)
+            assert f.line > 0 and f.message
+    else:
+        assert not hits, (f"{path.name} must stay clean for {rule}: "
+                          f"{[f.format() for f in hits]}")
+
+
+def test_every_rule_has_tp_and_nm_fixture():
+    for rule in RULES:
+        ruledir = FIXTURES / rule.lower()
+        assert ruledir.is_dir(), f"missing fixture dir for {rule}"
+        assert list(ruledir.glob("tp_*.py")), f"{rule} needs a tp_ fixture"
+        assert list(ruledir.glob("nm_*.py")), f"{rule} needs an nm_ fixture"
+
+
+def test_rule_catalog_shape():
+    assert set(RULES) == {
+        "EDK001", "EDK002", "EDK003", "EDK004",
+        "EDK101", "EDK102", "EDK103", "EDK104",
+        "EDK201", "EDK202", "EDK203"}
+    for rule in RULES.values():
+        assert rule.summary
+        assert rule.severity in ("error", "warning")
+
+
+# ------------------------------------------------- the historical bug classes
+def test_pr2_hash_seed_bug_fails_lint():
+    """Re-introducing PR 2's process-salted arrival seeding is caught."""
+    hits = _rule_findings(FIXTURES / "edk001" / "tp_pr2_hash_seed.py",
+                          "EDK001")
+    assert hits and "hash()" in hits[0].message
+
+
+def test_pr5_resurrection_bug_fails_lint():
+    """Removing the tombstone revoke-on-put (PR 5's fix) is caught."""
+    hits = _rule_findings(FIXTURES / "edk203" / "tp_pr5_resurrection.py",
+                          "EDK203")
+    assert hits and "revoke-on-put" in hits[0].message
+
+
+# ------------------------------------------------------------- repo is clean
+def test_src_repro_is_clean():
+    """The gate CI enforces: the real tree has zero findings."""
+    findings = analyze_paths([SRC_REPRO])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# -------------------------------------------------------------- suppressions
+def _analyze_source(tmp_path, source, select=None):
+    f = tmp_path / "mod.py"
+    f.write_text(textwrap.dedent(source))
+    return analyze_paths([f], select=select)
+
+
+def test_trailing_suppression(tmp_path):
+    src = """\
+    def seed(gid):
+        return hash(gid)  # lint: ignore[EDK001]
+    """
+    assert _analyze_source(tmp_path, src, {"EDK001"}) == []
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    src = """\
+    def seed(gid):
+        # lint: ignore[EDK001]
+        return hash(gid)
+    """
+    assert _analyze_source(tmp_path, src, {"EDK001"}) == []
+
+
+def test_comma_list_and_bare_suppression(tmp_path):
+    import random  # noqa: F401  (the fixture imports it, not us)
+    src = """\
+    import random
+    def seed(gid):
+        return hash(gid) + random.random()  # lint: ignore[EDK001, EDK003]
+    def roll():
+        return random.random()  # lint: ignore
+    """
+    assert _analyze_source(tmp_path, src) == []
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    src = """\
+    import random
+    def seed(gid):
+        return hash(gid) + random.random()  # lint: ignore[EDK001]
+    """
+    hits = _analyze_source(tmp_path, src)
+    assert [f.rule for f in hits] == ["EDK003"]
+
+
+def test_unparseable_file_reports_edk000(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def broken(:\n")
+    hits = analyze_paths([f])
+    assert [f.rule for f in hits] == ["EDK000"]
+    assert "does not parse" in hits[0].message
+
+
+# ----------------------------------------------------------------------- CLI
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=REPO, env=env)
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = _run_cli("src/repro")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_cli_findings_exit_one_with_location():
+    tp = "tests/fixtures/lint/edk001/tp_pr2_hash_seed.py"
+    proc = _run_cli(tp)
+    assert proc.returncode == 1
+    assert "EDK001" in proc.stdout and "tp_pr2_hash_seed.py:" in proc.stdout
+
+
+def test_cli_json_output():
+    tp = "tests/fixtures/lint/edk203/tp_pr5_resurrection.py"
+    proc = _run_cli(tp, "--json")
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload and payload[0]["rule"] == "EDK203"
+    assert set(payload[0]) == {"rule", "severity", "path", "line", "col",
+                               "message"}
+
+
+def test_cli_select_filters_rules():
+    tp = "tests/fixtures/lint/edk001/tp_pr2_hash_seed.py"
+    proc = _run_cli(tp, "--select", "EDK002")
+    assert proc.returncode == 0, proc.stdout
+
+
+def test_cli_unknown_rule_is_usage_error():
+    proc = _run_cli("src/repro", "--select", "EDK999")
+    assert proc.returncode == 2
+    assert "unknown rule" in proc.stderr
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in RULES:
+        assert rule in proc.stdout
+
+
+# -------------------------------------------------------------- mypy gate
+def test_mypy_gate_layers_are_clean():
+    """The CI type gate (mypy.ini) over repro.core / repro.fault /
+    repro.analysis; skips where mypy is not installed (the gate is
+    enforced by CI, which installs requirements-dev)."""
+    pytest.importorskip("mypy")
+    env = dict(os.environ, MYPYPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file", "mypy.ini",
+         "-p", "repro.core", "-p", "repro.fault", "-p", "repro.analysis"],
+        capture_output=True, text=True, cwd=REPO, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
