@@ -19,11 +19,14 @@ import numpy as np
 _ROWS: list = []
 _FAILOVER_ROWS: list = []
 _HANDOFF_ROWS: list = []
+_SCENARIO_ROWS: list = []
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 _FAILOVER_JSON_PATH = (Path(__file__).resolve().parent.parent
                        / "BENCH_failover.json")
 _HANDOFF_JSON_PATH = (Path(__file__).resolve().parent.parent
                       / "BENCH_handoff.json")
+_SCENARIOS_JSON_PATH = (Path(__file__).resolve().parent.parent
+                        / "BENCH_scenarios.json")
 
 
 def _row(name, value, derived=""):
@@ -44,6 +47,11 @@ def _write_failover_json():
 def _write_handoff_json():
     _HANDOFF_JSON_PATH.write_text(json.dumps(
         dict(rows=_HANDOFF_ROWS), indent=1, sort_keys=True) + "\n")
+
+
+def _write_scenarios_json():
+    _SCENARIOS_JSON_PATH.write_text(json.dumps(
+        dict(rows=_SCENARIO_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _timed(name, fn):
@@ -230,6 +238,44 @@ def bench_fig_handoff():
                                       if isinstance(v, float) else v)
                                   for k, v in r.items()})
     _write_handoff_json()
+
+
+def bench_fig_scenarios():
+    """Partition-aware scenario engine: split-brain cuts (refusals, not
+    stale acks), correlated regional failures with old-identity rejoin,
+    flash-crowd surges, and diurnal geo-rotation — on both engines, with
+    the refusal/unavailability accounting mirrored into the committed
+    BENCH_scenarios.json."""
+    from repro.sim.experiments import fig_scenarios
+    for engine in ("fast", "oracle"):
+        for r in fig_scenarios(ops_per_client=1000, engine=engine):
+            s = f"{r['scenario']}.{engine}"
+            _row(f"fig_scenarios.latency_ms.{s}",
+                 f"{r['mean_latency_ms']:.2f}",
+                 f"p95={r['p95_latency_ms']:.2f};"
+                 f"p99={r['p99_latency_ms']:.2f}")
+            _row(f"fig_scenarios.throughput_ops.{s}",
+                 f"{r['throughput_ops']:.0f}",
+                 f"ops={r['ops']};lost={r['lost_ops']}")
+            _row(f"fig_scenarios.refusals.{s}",
+                 f"{r['refused_writes'] + r['refused_reads']}",
+                 f"writes={r['refused_writes']};reads={r['refused_reads']};"
+                 f"cross_cut={r['refused_cross_cut']};"
+                 f"no_quorum={r['refused_no_quorum']};"
+                 f"minority={r['refused_minority_side']}")
+            _row(f"fig_scenarios.unavailability_ms.{s}",
+                 f"{r['partition_unavailability_ms']:.1f}",
+                 f"failure={r['failure_unavailability_ms']:.1f};"
+                 f"rejoined={r['keys_rejoined']}")
+            if "surge_p95_ms" in r:
+                _row(f"fig_scenarios.surge_p95_ms.{s}",
+                     f"{r['surge_p95_ms']:.2f}",
+                     f"p99={r['surge_p99_ms']:.2f};ops={r['surge_ops']}")
+            _row(f"fig_scenarios.walltime_s.{s}", f"{r['walltime_s']:.2f}")
+            _SCENARIO_ROWS.append({k: (round(v, 4)
+                                       if isinstance(v, float) else v)
+                                   for k, v in r.items()})
+    _write_scenarios_json()
 
 
 def bench_fig_scale():
@@ -448,6 +494,7 @@ def main() -> None:
     _timed("fig_churn", bench_fig_churn)
     _timed("fig_failover", bench_fig_failover)
     _timed("fig_handoff", bench_fig_handoff)
+    _timed("fig_scenarios", bench_fig_scenarios)
     _timed("fig_scale", bench_fig_scale)
     _timed("headline_claims", bench_headline_claims)
     _timed("fig5_6", bench_fig5_6_locality)

@@ -82,6 +82,24 @@ class EdgeGroup:
         )
         self.reachable = True  # network-partition flag (§7.3 failover)
 
+    # ---------------------------------------------- network cut (split brain)
+    def set_partition(self, sides: Dict[str, int]) -> None:
+        """Cut this group's Raft links per the node -> side map (learner
+        ids included); see :meth:`LocalCluster.set_partition`."""
+        self.raft.set_partition(sides)
+
+    def heal_partition(self) -> None:
+        self.raft.heal_partition()
+
+    def quorum_side(self) -> Optional[int]:
+        return self.raft.quorum_side()
+
+    def has_quorum(self) -> bool:
+        """False while an active cut leaves no side with a voter majority
+        (a straddled group): neither side may commit or serve linearizable
+        reads, so writes refuse instead of acking stale."""
+        return self.raft.quorum_side() is not None
+
     # -- §7.3: attach another group's nodes as non-voting learners.
     # May be called once per backup group: with ``backup_depth > 1`` a
     # primary attaches the nodes of several successor groups, each keeping
@@ -157,17 +175,23 @@ class EdgeGroup:
 
     # ------------------------------------------------------------ KV ops
     def put(self, dtype: str, key: str, value: Any) -> OpResult:
+        if not self.has_quorum():
+            return OpResult(False)  # cut splits the quorum: refuse, not ack
         lead = self.raft.run_until_leader()
         self.raft.propose(("put", dtype, key, value))
         return OpResult(True, quorum_size=self.quorum(), leader=lead.id)
 
     def delete(self, dtype: str, key: str) -> OpResult:
+        if not self.has_quorum():
+            return OpResult(False)
         lead = self.raft.run_until_leader()
         self.raft.propose(("delete", dtype, key, None))
         return OpResult(True, quorum_size=self.quorum(), leader=lead.id)
 
     def get(self, dtype: str, key: str, *, linearizable: bool = True) -> OpResult:
         if linearizable:
+            if not self.has_quorum():
+                return OpResult(False)  # ReadIndex needs a quorum round
             # etcd-style ReadIndex: the leader confirms leadership with a
             # heartbeat quorum round, then answers from its state machine.
             # LocalCluster.propose drives commits synchronously, so after the
@@ -285,6 +309,26 @@ class EdgeKVCluster:
         self._next_job = 0
         self.draining: Set[str] = set()     # gids mid-async-drain
         self._drain_via: Dict[str, str] = {}  # draining gw -> substitute gw
+        # ------- network partition state (scenario engine) -------
+        # gid -> side (0/1) while a cut is active; None = no cut. A cut
+        # gates *availability*, never ownership: the ring and the lease
+        # table are untouched, so healing can never double-own a key.
+        self.partition_of: Optional[Dict[str, int]] = None
+        self.partition_straddle: Dict[str, int] = {}  # gid -> members on side 1
+        self.partition_minority = 1
+        # gid -> side that still holds the group's quorum (None when the
+        # cut splits it); precomputed at cut time for the refusal checks
+        self._quorum_side_of: Dict[str, Optional[int]] = {}
+        self._partitioned_rafts: List[str] = []
+        self.partition_log: List[Tuple[str, Any]] = []
+        # client-visible unavailability accounting: refused ops never
+        # mutate state, they are *counted* instead of acked stale
+        self.refusals: Dict[str, int] = dict(
+            put=0, get=0, delete=0, cross_cut=0, no_quorum=0,
+            minority_side=0, majority_side=0)
+        # crashed-out identities that may re-join under their old gateway
+        # id: gid -> (gw_id, node_ids, group seed)
+        self.former_groups: Dict[str, Tuple[str, List[str], int]] = {}
         for size in group_sizes:
             self._spawn_group(size, weight=1.0)
         self.backup_of: Dict[str, str] = {}        # gid -> first backup
@@ -314,6 +358,162 @@ class EdgeKVCluster:
             if gw.location_cache is not None:
                 gw.location_cache.invalidate()
 
+    # ------------------------------------------- network partitions (cuts)
+    def _require_whole_view(self, what: str) -> None:
+        if self.partition_of is not None:
+            raise RuntimeError(
+                f"cluster is partitioned: {what} needs a global view — "
+                "heal the cut first")
+
+    def partition(self, side: "List[str]", *,
+                  straddle: Optional[Dict[str, int]] = None) -> None:
+        """Install a network cut: groups listed in ``side`` land on side 1,
+        every other group on side 0. ``straddle`` maps group ids to the
+        number of their *members* stranded on side 1 (the last ``k`` node
+        ids), modeling a Raft group whose quorum spans the cut.
+
+        Semantics (split-brain prevention by refusal, not failover):
+
+        * each group's Raft links are cut per-node (learner mirrors hosted
+          across the cut stop receiving entries — realistic divergence);
+        * a straddled group with no majority side refuses writes and
+          linearizable reads entirely;
+        * cross-cut client ops refuse at the gateway (counted in
+          :attr:`refusals`) instead of acking stale;
+        * ownership never moves: the ring, promotion pointers, and lease
+          table are untouched, so :meth:`heal_partition` cannot create a
+          double owner or resurrect a deleted key.
+        """
+        if self.partition_of is not None:
+            raise RuntimeError("a partition is already active")
+        cut = set(side)
+        unknown = cut - set(self.groups)
+        if unknown:
+            raise KeyError(
+                f"unknown group(s) in partition side: {sorted(unknown)}")
+        straddle = dict(straddle or {})
+        for gid, k in straddle.items():
+            grp = self.groups[gid]
+            if not 0 < k < grp.n:
+                raise ValueError(
+                    f"straddle {gid!r}: need 0 < side-1 members < {grp.n}")
+            if gid in cut:
+                raise ValueError(
+                    f"straddling group {gid!r} spans the cut; do not also "
+                    "list it in `side`")
+        self.partition_of = {gid: (1 if gid in cut else 0)
+                             for gid in self.groups}
+        self.partition_straddle = straddle
+        n1 = sum(self.partition_of.values())
+        self.partition_minority = 1 if n1 * 2 <= len(self.partition_of) else 0
+        self._partitioned_rafts = []
+        self._quorum_side_of = {}
+        for gid, group in self.groups.items():
+            own = self.partition_of[gid]
+            k = straddle.get(gid, 0)
+            assign: Dict[str, int] = {}
+            for j, nid in enumerate(group.node_ids):
+                assign[nid] = 1 if (k and j >= group.n - k) else own
+            # learner mirrors live on their host group's side of the cut
+            for lg in group._learner_groups:
+                lside = self.partition_of[lg.id]
+                for nid in lg.node_ids:
+                    assign[f"{nid}@backup-of-{gid}"] = lside
+            if len(set(assign.values())) > 1:
+                group.set_partition(assign)
+                self._partitioned_rafts.append(gid)
+            self._quorum_side_of[gid] = group.quorum_side() \
+                if gid in self._partitioned_rafts else own
+        self.partition_log.append(
+            ("cut", dict(side=sorted(cut), straddle=dict(straddle))))
+
+    def heal_partition(self) -> int:
+        """Remove the cut and reconcile the divergent views.
+
+        Ownership never moved, so the merge is replay, not arbitration:
+        each cut Raft re-converges (one disruptive re-election at most)
+        and its cross-cut learner mirrors catch up to the leader's
+        committed log — so a crash right after the heal cannot lose
+        acknowledged writes to a stale mirror. The Chord stabilization
+        pass is a no-op replay asserting the overlay stayed converged.
+        Deferred cross-cut leases resume with their dirty/tombstone flags
+        carried over. Returns the number of groups whose Raft was cut.
+        """
+        if self.partition_of is None:
+            raise RuntimeError("no active partition")
+        partitioned = self._partitioned_rafts
+        self.partition_of = None
+        self.partition_straddle = {}
+        self._quorum_side_of = {}
+        self._partitioned_rafts = []
+        for gid in partitioned:
+            group = self.groups[gid]
+            group.heal_partition()
+            self._replay_backlog(group)
+        while not self.ring.stabilized:  # pragma: no cover - cuts never
+            self.ring.stabilize()        # mutate the ring, so this is the
+            self.ring.fix_fingers()      # promised (no-op) replay pass
+        self.partition_log.append(("heal", dict(self.refusals)))
+        return len(partitioned)
+
+    def _replay_backlog(self, group: EdgeGroup) -> None:
+        """Post-heal stabilization replay: drive ``group``'s Raft until
+        every live learner mirror has applied the leader's committed
+        prefix (the entries that crossed the cut only now)."""
+        raft = group.raft
+        lead = raft.run_until_leader()
+        for _ in range(200):
+            learners = [raft.nodes[lid] for lid in group.learner_ids
+                        if lid in raft.nodes and lid not in raft.down]
+            if all(n.last_applied >= lead.commit_index for n in learners):
+                return
+            raft.step()
+            lead = raft.run_until_leader()
+        raise RuntimeError(  # pragma: no cover - bounded replay failed
+            f"learner mirrors of {group.id!r} did not catch up after heal")
+
+    def _count_refusal(self, op: str, client_side: Optional[int],
+                       why: str) -> None:
+        self.refusals[op] += 1
+        self.refusals[why] += 1
+        if client_side is not None:
+            self.refusals["minority_side"
+                          if client_side == self.partition_minority
+                          else "majority_side"] += 1
+
+    def _partition_check(self, op: str, client_gid: str,
+                         owner_gid: str) -> Optional[OpResult]:
+        """Split-brain guard for one op: a counted, non-mutating refusal
+        when the op's authority is unreachable from the client's side of
+        the cut (or has no quorum side at all); ``None`` = allowed."""
+        if self.partition_of is None:
+            return None
+        cs = self._quorum_side_of.get(client_gid)
+        qs = self._quorum_side_of.get(owner_gid)
+        if cs is None or qs is None:
+            self._count_refusal(op, cs, "no_quorum")
+            return OpResult(False)
+        if cs != qs:
+            self._count_refusal(op, cs, "cross_cut")
+            return OpResult(False)
+        return None
+
+    def _lease_deferred(self, lease: MigrationLease) -> bool:
+        """True when an active cut blocks resolving ``lease``: background
+        migration needs the destination's quorum and (unless staged) the
+        source on the same side — a deferred lease simply waits for the
+        heal, its dirty/tombstone flags intact."""
+        if self.partition_of is None:
+            return False
+        dside = self._quorum_side_of.get(lease.dst)
+        if dside is None:
+            return True
+        if lease.src is not None and not lease.staged:
+            sside = self._quorum_side_of.get(lease.src)
+            if sside is None or sside != dside:
+                return True
+        return False
+
     def add_group(self, size: int, *, weight: float = 1.0,
                   async_handoff: bool = False) -> str:
         """Join a new edge group + gateway at runtime (elastic scale-out).
@@ -334,6 +534,7 @@ class EdgeKVCluster:
         an in-flight handoff (only a crash interrupts one), so at most one
         handoff job is ever active.
         """
+        self._require_whole_view("membership change (add_group)")
         self.drain_handoff()
         # Snapshot ownership BEFORE the ring changes. Leader stores hold
         # only keys their group authoritatively owns (§7.3 mirrors live in
@@ -388,6 +589,7 @@ class EdgeKVCluster:
         the number of keys leased. Planned membership changes serialize
         behind an in-flight handoff (see :meth:`add_group`).
         """
+        self._require_whole_view("membership change (remove_group)")
         if gid not in self.groups:
             raise KeyError(gid)
         if gid in self.draining:
@@ -410,8 +612,11 @@ class EdgeKVCluster:
         # Adopted local data of crashed groups this group promoted must
         # move out before the drain destroys the store (the drain below
         # only re-homes GLOBAL keys) — it re-homes to the drained group's
-        # ring successor, and the promotion pointers follow.
-        self._migrate_adopted_local(gid, gw_id)
+        # ring successor, and the promotion pointers follow. The async
+        # drain leases this namespace instead (below), keeping the drain
+        # zero-downtime end to end.
+        if not async_handoff:
+            self._migrate_adopted_local(gid, gw_id)
         # End the draining group's backup relationship BEFORE the handoff:
         # the group is leaving, so its mirror must not outlive it, and the
         # handoff's src.delete traffic has no business replicating to a
@@ -441,6 +646,28 @@ class EdgeKVCluster:
                 if key not in self.leases:
                     dest_gid = self.gateways[self.ring.locate(key)].group.id
                     self._acquire_lease(key, gid, dest_gid, job)
+            # adopted-local namespace: lease the promoted "<dead>::" keys
+            # to the drained group's ring successor instead of moving them
+            # synchronously; the promotion pointer flips at acquisition
+            # (the lease arbitrates authority meanwhile, same as global).
+            # Caveat: the lease table is keyed by key alone, so a global
+            # key spelled exactly like a namespaced local one would
+            # collide — repo keyspaces never use the "<gid>::" shape.
+            adopted = sorted(dead for dead, host
+                             in self.promoted_local.items() if host == gid)
+            if adopted and substitute is not None:
+                from .backup import PROMOTED_SEP
+                new_host_gid = self.gateways[substitute].group.id
+                lead = src.raft.run_until_leader()
+                src.raft.step(0.0)  # read barrier before snapshotting
+                prefixes = tuple(f"{d}{PROMOTED_SEP}" for d in adopted)
+                for key in [k for k in src.storage[lead.id].stores[LOCAL]
+                            if k.startswith(prefixes)]:
+                    if key not in self.leases:
+                        self._acquire_lease(key, gid, new_host_gid, job,
+                                            tier=LOCAL)
+                for dead in adopted:
+                    self.promoted_local[dead] = new_host_gid
             self._rewire_backups()
             leased = self.handoff_jobs[job]["leased"]
             self.migrations.append(("remove-async", gid, leased))
@@ -506,6 +733,7 @@ class EdgeKVCluster:
         a dead successor chain, or no surviving backup for some dead
         group's mirrors).
         """
+        self._require_whole_view("membership change (crash_group)")
         if gid not in self.groups:
             raise KeyError(gid)
         if gid in self.draining:
@@ -532,12 +760,22 @@ class EdgeKVCluster:
                         f"hold {dead_gid!r}'s mirror (backup_depth="
                         f"{self._backup_depth} tolerates at most "
                         f"{self._backup_depth} overlapping crashes)")
+        # adopted-local migration leases are not crash-recoverable (the
+        # namespaced keys are not ring-addressed, so no retarget rule
+        # exists for them) — refuse the crash instead of corrupting the
+        # promotion chain, like the other exceeded-fault-tolerance cases
+        for lease in self.leases.active():
+            if lease.tier == LOCAL and gid in (lease.src, lease.dst):
+                raise RuntimeError(
+                    f"cannot crash {gid!r}: adopted-local handoff in "
+                    "flight (drain it first)")
         gw_id = self.gateway_of_group[gid]
         # the ring guard raises before any mutation (last node / dead
         # successor chain), so a refused crash leaves the cluster intact
         self.ring.crash_node(gw_id)
         group.crash_all()
         self.dead_groups[gid] = (group, chain)
+        self.former_groups[gid] = (gw_id, list(group.node_ids), group._seed)
         del self.groups[gid]
         del self.gateways[gw_id]
         del self.gateway_of_group[gid]
@@ -580,6 +818,7 @@ class EdgeKVCluster:
         the background.
         """
         from .backup import promote_backup
+        self._require_whole_view("membership change (recover_group)")
         if gid not in self.dead_groups:
             raise KeyError(f"{gid!r} is not a crashed group pending "
                            "recovery")
@@ -593,6 +832,79 @@ class EdgeKVCluster:
             ("recover-async" if async_handoff else "recover", gid, moved))
         return moved
 
+    def rejoin_group(self, gid: str) -> int:
+        """Re-join a crashed-and-recovered group under its OLD identity.
+
+        The returning gateway re-enters the overlay with the same id, and
+        vnode positions are a pure hash of that id — so it reclaims
+        exactly the key ranges it owned before the crash. Only those keys
+        move back (plus the adopted local data promoted at recovery,
+        which returns home and drops its promotion pointer), instead of
+        the second full reshuffle a fresh ``add_group`` identity would
+        pay on top of the one the crash already caused. The group's
+        stores start empty (fresh hosts, same names): state returns via
+        the handoff, never from the dead Raft logs. Returns the number of
+        keys moved back.
+        """
+        self._require_whole_view("membership change (rejoin_group)")
+        if gid in self.groups:
+            raise RuntimeError(f"{gid!r} is already a live group")
+        if gid in self.dead_groups:
+            raise RuntimeError(
+                f"{gid!r} is still crashed: recover it first (re-join "
+                "needs its mirrors promoted and the ring stabilized)")
+        former = self.former_groups.get(gid)
+        if former is None:
+            raise KeyError(f"{gid!r} never crashed out of this cluster")
+        gw_id, node_ids, seed = former
+        self.drain_handoff()  # membership serializes behind handoffs
+        # ownership snapshot BEFORE the ring changes (same rule as
+        # add_group: leader stores hold only authoritatively owned keys)
+        owned_before: List[Tuple[str, EdgeGroup]] = []
+        for other_gw, gw in self.gateways.items():
+            if other_gw not in self.ring.nodes:
+                continue  # draining gateway: already off the ring
+            src = gw.group
+            lead = src.raft.run_until_leader()
+            src.raft.step(0.0)  # read barrier: leader state is current
+            owned_before.extend(
+                (k, src) for k in list(src.storage[lead.id].stores[GLOBAL])
+                if self.ring.locate(k) == other_gw)
+        group = EdgeGroup(gid, node_ids, seed=seed)
+        self.ring.add_node(gw_id)  # same id -> same vnode positions
+        self._invalidate_location_caches()
+        self.groups[gid] = group
+        self.gateways[gw_id] = GatewayNode(
+            gw_id, group, self.ring, cache_size=self._gateway_cache)
+        self.gateway_of_group[gid] = gw_id
+        moved = 0
+        for key, src in owned_before:
+            if self.ring.locate(key) == gw_id:
+                moved += self._migrate_key(src, group, key)
+        # adopted local data promoted at recovery returns home: walk the
+        # promotion chain to its current live host, strip the namespace
+        if gid in self.promoted_local:
+            from .backup import PROMOTED_SEP
+            prefix = f"{gid}{PROMOTED_SEP}"
+            host_gid = self.promoted_local[gid]
+            while host_gid not in self.groups:
+                prefix = f"{host_gid}{PROMOTED_SEP}{prefix}"
+                host_gid = self.promoted_local[host_gid]
+            host = self.groups[host_gid]
+            lead = host.raft.run_until_leader()
+            host.raft.step(0.0)  # read barrier before snapshotting
+            for key in [k for k in host.storage[lead.id].stores[LOCAL]
+                        if k.startswith(prefix)]:
+                val = host.get(LOCAL, key, linearizable=True).value
+                group.put(LOCAL, key[len(prefix):], val)
+                host.delete(LOCAL, key)
+                moved += 1
+            del self.promoted_local[gid]
+        self._rewire_backups()
+        del self.former_groups[gid]
+        self.migrations.append(("rejoin", gid, moved))
+        return moved
+
     # ------------------------------------------------ async handoff driver
     def _start_job(self, kind: str, gid: str) -> int:
         job = self._next_job
@@ -603,9 +915,10 @@ class EdgeKVCluster:
 
     def _acquire_lease(self, key: str, src: Optional[str], dst: str,
                        job: Optional[int], *, value: Any = None,
-                       staged: bool = False) -> MigrationLease:
+                       staged: bool = False,
+                       tier: str = GLOBAL) -> MigrationLease:
         lease = self.leases.acquire(key, src, dst, job=job, value=value,
-                                    staged=staged)
+                                    staged=staged, tier=tier)
         if job is not None:
             self.handoff_jobs[job]["leased"] += 1
             self.handoff_jobs[job]["pending"] += 1
@@ -659,6 +972,8 @@ class EdgeKVCluster:
                 break
             if self.leases.get(lease.key) is not lease:
                 continue  # pulled by a concurrent read
+            if self._lease_deferred(lease):
+                continue  # blocked behind an active cut; resumes at heal
             self._resolve_lease(lease)
             resolved += 1
         return resolved
@@ -666,10 +981,15 @@ class EdgeKVCluster:
     def drain_handoff(self) -> int:
         """Resolve every pending lease (the atomic-membership entry points
         call this first, so overlapping membership operations serialize
-        behind the in-flight handoff)."""
+        behind the in-flight handoff). Under an active cut, leases whose
+        endpoints straddle it stay deferred — the drain stops instead of
+        spinning on them."""
         total = 0
         while self.leases:
-            total += self.step_handoff()
+            n = self.step_handoff()
+            total += n
+            if n == 0:
+                break  # every remaining lease is deferred across a cut
         return total
 
     @property
@@ -687,10 +1007,11 @@ class EdgeKVCluster:
           or the staged mirror value — commit at the destination, verify
           at a quorum, delete at the source).
         """
+        tier = lease.tier
         src = self.groups.get(lease.src) if lease.src is not None else None
         if lease.tombstone or lease.dirty:
             if src is not None:
-                src.delete(GLOBAL, lease.key)
+                src.delete(tier, lease.key)
             self._release_lease(
                 lease, "tombstone" if lease.tombstone else "superseded")
             return
@@ -698,14 +1019,14 @@ class EdgeKVCluster:
         if lease.staged:
             val = lease.value
         else:
-            val = src.get(GLOBAL, lease.key, linearizable=True).value
-        dest.put(GLOBAL, lease.key, val)
-        check = dest.get(GLOBAL, lease.key, linearizable=True)
+            val = src.get(tier, lease.key, linearizable=True).value
+        dest.put(tier, lease.key, val)
+        check = dest.get(tier, lease.key, linearizable=True)
         if not check.ok or check.value != val:  # pragma: no cover - safety
             raise RuntimeError(
                 f"lease handoff verification failed for {lease.key!r}")
         if src is not None:
-            src.delete(GLOBAL, lease.key)
+            src.delete(tier, lease.key)
         self._release_lease(lease, "copied")
 
     def _crash_lease_fixups(self, gid: str) -> None:
@@ -764,6 +1085,37 @@ class EdgeKVCluster:
         if lease.dirty or lease.tombstone:
             return
         self._resolve_lease(lease)
+
+    def _local_lease_op(self, lease: MigrationLease, op: str, key: str,
+                        value: Any, linearizable: bool) -> OpResult:
+        """Client op on an adopted-local key mid-migration (satellite of
+        the async drain): the lease destination is authoritative from
+        acquisition, exactly like the global protocol — writes commit at
+        the destination and mark the lease dirty (the stale source copy
+        is discarded at resolution), deletes additionally tombstone, and
+        a read of a still-pending lease pulls the key on demand first."""
+        dst = self.groups[lease.dst]
+        if op == "put":
+            res = dst.put(LOCAL, key, value)
+            if res.ok:
+                lease.dirty = True
+                lease.tombstone = False
+            return res
+        if op == "delete":
+            res = dst.delete(LOCAL, key)
+            if res.ok:
+                lease.dirty = True
+                lease.tombstone = True
+            return res
+        if not (lease.dirty or lease.tombstone):
+            if self._lease_deferred(lease):
+                # the pending value sits across an active cut: refuse
+                # (counted unavailability) rather than answer stale
+                self._count_refusal(
+                    "get", self._quorum_side_of.get(lease.dst), "cross_cut")
+                return OpResult(False)
+            self._resolve_lease(lease)
+        return dst.get(LOCAL, key, linearizable=linearizable)
 
     def _route_gateway(self, gw: "GatewayNode") -> "GatewayNode":
         """Routing entry point for a client's gateway: a draining gateway
@@ -840,3 +1192,55 @@ class EdgeKVCluster:
     def delete(self, key: str, dtype: str, *, client_group: str) -> OpResult:
         from .placement import placement
         return placement(self, "delete", key, None, dtype, client_group)
+
+    def handoff_pacer(self, *, batch: int = 64,
+                      period: float = 0.05) -> "HandoffPacer":
+        """A rate-limited :meth:`step_handoff` driver (see
+        :class:`HandoffPacer`)."""
+        return HandoffPacer(self, batch=batch, period=period)
+
+
+class HandoffPacer:
+    """Rate-limited driver for the async handoff: at most ``batch`` leases
+    resolve per ``period`` seconds of virtual time, with every live
+    group's Raft clock advanced between rounds — the core layer's mirror
+    of the simulator's paced ``_drain_leases`` (batch + pause per round),
+    so scenario scripts can drain without manual stepping.
+    """
+
+    def __init__(self, cluster: EdgeKVCluster, *, batch: int = 64,
+                 period: float = 0.05):
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        if period < 0:
+            raise ValueError("period must be >= 0")
+        self.cluster = cluster
+        self.batch = batch
+        self.period = period
+        self.now = 0.0
+        self.rounds: List[Tuple[float, int]] = []  # (virtual t, resolved)
+
+    def tick(self) -> int:
+        """One pacing round: resolve up to ``batch`` leases, then advance
+        every live group's virtual clock by ``period``. Returns the
+        number of leases resolved this round."""
+        n = self.cluster.step_handoff(self.batch)
+        for group in self.cluster.groups.values():
+            group.raft.step(self.period)
+        self.now += self.period
+        self.rounds.append((self.now, n))
+        return n
+
+    def drain(self, max_rounds: int = 100_000) -> int:
+        """Tick until no pending lease remains. Stops early (instead of
+        spinning) when a round resolves nothing — every remaining lease
+        is deferred behind an active cut."""
+        total = 0
+        for _ in range(max_rounds):
+            if not self.cluster.leases:
+                break
+            n = self.tick()
+            total += n
+            if n == 0:
+                break
+        return total

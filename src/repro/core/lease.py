@@ -64,6 +64,7 @@ class MigrationLease:
     tombstone: bool = False
     value: Any = None          # staged value (recovery leases only)
     staged: bool = False       # True when `value` is authoritative for src
+    tier: str = "global"       # data tier the key lives in ("global"/"local")
 
 
 class LeaseTable:
@@ -87,14 +88,14 @@ class LeaseTable:
     # ------------------------------------------------------------ lifecycle
     def acquire(self, key: str, src: Optional[str], dst: str, *,
                 job: Optional[int] = None, value: Any = None,
-                staged: bool = False) -> MigrationLease:
+                staged: bool = False, tier: str = "global") -> MigrationLease:
         if key in self._leases:
             raise RuntimeError(f"key {key!r} is already under migration "
                                f"(lease seq {self._leases[key].seq})")
         if src is None and not staged:
             raise ValueError("a lease without a source group must be staged")
         lease = MigrationLease(key, src, dst, self._seq, job=job,
-                               value=value, staged=staged)
+                               value=value, staged=staged, tier=tier)
         self._seq += 1
         self._leases[key] = lease
         self.stats["acquired"] += 1

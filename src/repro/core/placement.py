@@ -45,6 +45,21 @@ def placement(cluster: "EdgeKVCluster", op: str, key: str, value: Any,
     group = cluster.groups[client_group]
 
     if dtype == LOCAL:
+        # Split-brain guard: a straddled group with no quorum side refuses
+        # writes and linearizable reads (counted, non-mutating) instead of
+        # acking stale; serializable reads stay stale-by-contract.
+        if op != "get" or linearizable:
+            chk = cluster._partition_check(op, client_group, client_group)
+            if chk is not None:
+                return chk
+        # Adopted-local key under an async-drain migration lease: the
+        # lease destination is authoritative from acquisition (see
+        # EdgeKVCluster._local_lease_op) — the promotion-pointer walk
+        # above already landed us at the destination group.
+        lease = cluster.leases.get(key)
+        if lease is not None and lease.tier == LOCAL:
+            return cluster._local_lease_op(lease, op, key, value,
+                                           linearizable)
         # Lines 2-7: replicate inside the local group. EdgeGroup.put routes
         # through the Raft leader exactly as `send(Leader, ...)` does.
         if op == "put":

@@ -64,6 +64,20 @@ class AppendResponse:
 Outbox = List[Tuple[str, Any]]
 
 
+def message_sender(msg: Any) -> str:
+    """The node id a Raft message originated from (link-level metadata:
+    every message type carries its sender in a role-named field)."""
+    if isinstance(msg, RequestVote):
+        return msg.candidate
+    if isinstance(msg, VoteResponse):
+        return msg.voter
+    if isinstance(msg, AppendEntries):
+        return msg.leader
+    if isinstance(msg, AppendResponse):
+        return msg.follower
+    raise TypeError(f"not a Raft message: {type(msg).__name__}")
+
+
 class RaftNode:
     """One Raft participant. ``voter=False`` makes it a learner (§7.3)."""
 
@@ -320,6 +334,10 @@ class LocalCluster:
             n.voter_ids = voters
         self.now = 0.0
         self.down: Set[str] = set()
+        # node id -> side (0/1) while a network cut is active; None = whole.
+        # Messages crossing the cut are dropped in flight (both directions),
+        # so each side runs Raft against only its own members.
+        self.partition: Optional[Dict[str, int]] = None
         for n in self.nodes.values():
             n.start(self.now)
 
@@ -331,9 +349,61 @@ class LocalCluster:
         self.down.discard(node_id)
         self.nodes[node_id]._reset_election_timer(self.now)
 
+    def set_partition(self, sides: Dict[str, int]) -> None:
+        """Install a network cut: ``sides`` maps node ids to side 0 or 1
+        (unlisted ids default to side 0). The cut gates *links*, not
+        nodes — every node keeps running, but cross-side messages vanish,
+        so only a side holding a voter majority can commit."""
+        self.partition = dict(sides)
+
+    def heal_partition(self) -> None:
+        """Remove the cut and re-converge before returning.
+
+        A minority-side candidate may hold an inflated term after
+        campaigning into the void; the explicit step lets the surviving
+        leader's next heartbeat collide with that term *now* (one
+        disruptive re-election at most), so the caller's next ``propose``
+        starts from a stable leader instead of tripping over a stale
+        higher term mid-commit."""
+        self.partition = None
+        for nid, n in self.nodes.items():
+            if nid not in self.down:
+                n._reset_election_timer(self.now)
+        self.step()
+        self.run_until_leader()
+
+    def quorum_side(self) -> Optional[int]:
+        """The side of the cut that still holds a live-voter majority of
+        the *full* voter set (the only side that can commit), ``0`` when
+        no cut is active, or ``None`` when the cut splits the quorum."""
+        if self.partition is None:
+            return 0
+        total = counted = 0
+        per_side: Dict[int, int] = {}
+        for nid, n in self.nodes.items():
+            if not n.is_voter:
+                continue
+            total += 1
+            if nid in self.down:
+                continue
+            s = self.partition.get(nid, 0)
+            per_side[s] = per_side.get(s, 0) + 1
+            counted += 1
+        for s in sorted(per_side):
+            if per_side[s] * 2 > total:
+                return s
+        return None
+
     def leader(self) -> Optional[RaftNode]:
         leaders = [n for n in self.nodes.values()
                    if n.role == LEADER and n.id not in self.down]
+        if self.partition is not None:
+            # a leader stranded on the wrong side of the cut cannot commit
+            # (and must never serve linearizable reads) — only the quorum
+            # side's leader counts while the cut is active
+            qs = self.quorum_side()
+            leaders = [n for n in leaders
+                       if self.partition.get(n.id, 0) == qs]
         if not leaders:
             return None
         return max(leaders, key=lambda n: n.term)
@@ -348,6 +418,10 @@ class LocalCluster:
             dest, msg = queue.pop(0)
             if dest in self.down:
                 continue
+            if self.partition is not None and \
+                    self.partition.get(message_sender(msg), 0) != \
+                    self.partition.get(dest, 0):
+                continue  # the cut drops cross-side traffic in flight
             queue.extend(self.nodes[dest].on_message(msg, self.now))
 
     def step(self, dt: float = 0.05) -> None:

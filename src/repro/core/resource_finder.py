@@ -43,6 +43,23 @@ def _leaseholder(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str):
     return lease, cluster.groups[lease.dst]
 
 
+def _partition_guard(cluster: "EdgeKVCluster", op: str, gw: "GatewayNode",
+                     key: str):
+    """Split-brain guard for a global op: resolve the key's authority (the
+    active leaseholder, else the ring owner) and refuse — counted,
+    non-mutating — when the client's side of the cut cannot reach it.
+    NEVER falls back to a cross-cut backup mirror: that is exactly the
+    stale-ack path a partition must close. Returns None when allowed."""
+    if cluster.partition_of is None:
+        return None
+    lease = cluster.leases.get(key)
+    if lease is not None:
+        owner_gid = lease.dst
+    else:
+        owner_gid = _owner(cluster, gw, key)[0].id
+    return cluster._partition_check(op, gw.group.id, owner_gid)
+
+
 def _backup_read(cluster: "EdgeKVCluster", group, key: str, path) -> OpResult:
     """§7.3 failover: walk the unreachable owner's backup chain and serve
     the read from the first live mirror (serializable, possibly stale)."""
@@ -64,6 +81,9 @@ def _backup_read(cluster: "EdgeKVCluster", group, key: str, path) -> OpResult:
 
 def resource_put(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str,
                  value: Any) -> OpResult:
+    refused = _partition_guard(cluster, "put", gw, key)
+    if refused is not None:
+        return refused
     lease, dst = _leaseholder(cluster, gw, key)
     if lease is not None:
         if not dst.reachable:
@@ -89,6 +109,9 @@ def resource_put(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str,
 
 def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
                  linearizable: bool = True) -> OpResult:
+    refused = _partition_guard(cluster, "get", gw, key)
+    if refused is not None:
+        return refused
     lease, dst = _leaseholder(cluster, gw, key)
     if lease is not None:
         lease_path = [gw.id, cluster.gateway_of_group[dst.id]]
@@ -109,6 +132,14 @@ def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
             return _backup_read(cluster, dst, key, lease_path)
         # per-key read barrier: a pending lease is completed on demand so
         # the destination answers authoritatively (dirty leases already are)
+        if not (lease.dirty or lease.tombstone) and \
+                cluster._lease_deferred(lease):
+            # the pending value sits across an active cut — refuse
+            # (counted unavailability) rather than pull through it
+            cluster._count_refusal(
+                "get", cluster._quorum_side_of.get(gw.group.id),
+                "cross_cut")
+            return OpResult(False)
         cluster._complete_lease_read(lease)
         res = dst.get(GLOBAL, key, linearizable=linearizable)
         res.dht_path = lease_path  # type: ignore[attr-defined]
@@ -128,6 +159,9 @@ def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
 
 def resource_delete(cluster: "EdgeKVCluster", gw: "GatewayNode",
                     key: str) -> OpResult:
+    refused = _partition_guard(cluster, "delete", gw, key)
+    if refused is not None:
+        return refused
     lease, dst = _leaseholder(cluster, gw, key)
     if lease is not None:
         if not dst.reachable:

@@ -98,6 +98,75 @@ def phi_trace(arrivals: Sequence[float], times: Sequence[float],
     return phi
 
 
+def suspicion_intervals(arrivals: Sequence[float], *,
+                        threshold: float = 8.0, window: int = 100,
+                        horizon: Optional[float] = None) -> np.ndarray:
+    """Closed-form suspicion windows for a detector observing ``arrivals``
+    (ascending heartbeat times).
+
+    For each observed arrival ``a_i`` (from the second on), suspicion
+    holds from ``a_i + detection_delay(window-mean at a_i)`` — the phi
+    crossing instant under the exponential model — until the next beat
+    lands; the final gap runs to ``horizon`` (default: the last arrival,
+    i.e. no trailing window). Returns a ``(k, 2)`` array of ``[t_on,
+    t_off)`` intervals, ascending and non-overlapping — the vectorized
+    counterpart of replaying :func:`phi_trace` and thresholding it.
+    """
+    a = np.asarray(arrivals, dtype=np.float64)
+    if len(a) < 2:
+        return np.zeros((0, 2))
+    iv = np.diff(a)
+    csum = np.concatenate([[0.0], np.cumsum(iv)])
+    idx = np.arange(1, len(a))          # estimate exists from a_1 on
+    lo = np.maximum(idx - window, 0)
+    mean = np.maximum((csum[idx] - csum[lo]) / (idx - lo), MIN_MEAN_S)
+    on = a[1:] + threshold * mean / LOG10_E
+    off = np.empty(len(a) - 1)
+    off[:-1] = a[2:]
+    off[-1] = float(a[-1]) if horizon is None else float(horizon)
+    keep = on < off
+    return np.stack([on[keep], off[keep]], axis=1)
+
+
+def interval_intersection(intervals_a: np.ndarray,
+                          intervals_b: np.ndarray) -> np.ndarray:
+    """Intersection of two ``(k, 2)`` interval sets (each ascending and
+    non-overlapping): the classic two-pointer merge."""
+    A = np.asarray(intervals_a, dtype=np.float64).reshape(-1, 2)
+    B = np.asarray(intervals_b, dtype=np.float64).reshape(-1, 2)
+    out: List[List[float]] = []
+    i = j = 0
+    while i < len(A) and j < len(B):
+        lo = max(A[i][0], B[j][0])
+        hi = min(A[i][1], B[j][1])
+        if lo < hi:
+            out.append([lo, hi])
+        if A[i][1] <= B[j][1]:
+            i += 1
+        else:
+            j += 1
+    return np.asarray(out, dtype=np.float64).reshape(-1, 2)
+
+
+def mutual_suspicion(arrivals_a: Sequence[float],
+                     arrivals_b: Sequence[float], *,
+                     threshold: float = 8.0, window: int = 100,
+                     horizon: Optional[float] = None):
+    """Symmetric suspicion across a cut: detector A observes B's beats
+    (``arrivals_a``) and vice versa. Returns ``(intervals_a, intervals_b,
+    overlap)`` where each interval set is per :func:`suspicion_intervals`
+    and ``overlap`` is their intersection — the two-sided danger window
+    during which BOTH sides suspect each other, i.e. exactly when
+    split-brain refusal (not failover) must hold on both sides of a
+    network partition.
+    """
+    ia = suspicion_intervals(arrivals_a, threshold=threshold,
+                             window=window, horizon=horizon)
+    ib = suspicion_intervals(arrivals_b, threshold=threshold,
+                             window=window, horizon=horizon)
+    return ia, ib, interval_intersection(ia, ib)
+
+
 def false_positive_rate(arrivals: Sequence[float], *,
                         threshold: float = 8.0, window: int = 100,
                         resolution: float = 1e-3,

@@ -12,6 +12,8 @@ from .records import OpRecord, RecordArray
 from .ycsb import YCSBWorkload, Op, KINDS, DTYPES
 from .cluster import SimEdgeKV, ServiceParams
 from .vectorized import FastSimEdgeKV
+from .scenario import (Diurnal, FlashCrowd, Partition, RegionalFailure,
+                       Scenario)
 from .sweep import SweepPoint, SweepResult, run_sweep, sweep_grid
 
 __all__ = [
@@ -19,5 +21,6 @@ __all__ = [
     "EDGE_SETTING", "CLOUD_SETTING", "SETTINGS", "NetworkModel", "Link",
     "YCSBWorkload", "Op", "KINDS", "DTYPES", "OpRecord", "RecordArray",
     "SimEdgeKV", "FastSimEdgeKV", "ServiceParams",
+    "Scenario", "Partition", "RegionalFailure", "FlashCrowd", "Diurnal",
     "SweepPoint", "SweepResult", "run_sweep", "sweep_grid",
 ]

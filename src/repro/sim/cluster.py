@@ -63,6 +63,7 @@ from .ycsb import (Op, YCSBWorkload, DTYPE_CODE, DTYPES, KIND_CODE, KINDS,
                    RECORD_BYTES, REQ_BYTES)
 
 ACK_BYTES = 64
+ERR_BYTES = REQ_BYTES  # refusal/error ack frame (header-only response)
 
 
 def arrival_seed(sim_seed: int, gid: str) -> int:
@@ -151,6 +152,20 @@ class SimEdgeKV:
         # engines; mutated in place so the fast engine can hold the ref.
         self.unavailable: Dict[str, str] = {}
         self.lost_ops = 0  # reads served while their key was unavailable
+        # network partition (scenario layer): gid -> side (0/1) while a
+        # cut over the Table-3 link matrix is active ({} = whole view).
+        # A partition gates *availability only* — no promotion, no route
+        # change, no churn event: both sides refuse ops whose authority
+        # sits across the cut (or straddles it with no quorum side)
+        # instead of acking stale, so heal is a pure merge by
+        # construction (no double-owner possible). Shared by both
+        # engines; mutated in place.
+        self.partition_of: Dict[str, int] = {}
+        self.partition_straddle: Dict[str, int] = {}  # gid -> replicas on side 1
+        self.partition_minority = 1
+        self.partition_events: List[Tuple[float, str]] = []
+        self.refusals = dict(writes=0, reads=0, cross_cut=0, no_quorum=0,
+                             minority_side=0, majority_side=0)
         # async handoff: per-key migration leases, key -> [src_gid,
         # dst_gid, dirty]. A leased key's destination is authoritative
         # from acquisition on; the value moves when a background release
@@ -205,6 +220,7 @@ class SimEdgeKV:
         (core-layer rule): leases still pending from an earlier event are
         released first, so a lease's destination can never go stale.
         """
+        self._require_whole_view("membership change (add_group)")
         if self.leases:
             self.release_leases()
         gid, gw = self._spawn_group(n)
@@ -245,6 +261,7 @@ class SimEdgeKV:
         key is leased to its new ring owner and the store empties as the
         leases resolve (:meth:`release_leases`); returns keys leased.
         """
+        self._require_whole_view("membership change (remove_group)")
         g = self.groups[gid]
         if g["retired"]:
             raise ValueError(f"{gid} already retired")
@@ -288,6 +305,11 @@ class SimEdgeKV:
         for key in list(self.leases):
             if max_keys is not None and n >= max_keys:
                 break
+            if self.partition_of:
+                lease = self.leases[key]
+                ss, ds = self._group_side(lease[0]), self._group_side(lease[1])
+                if ss is None or ds is None or ss != ds:
+                    continue  # deferred: the value would cross the cut
             src, dst, dirty = self.leases.pop(key)
             sstore = self.groups[src]["state"].stores[GLOBAL]
             if dirty:
@@ -356,7 +378,116 @@ class SimEdgeKV:
         demand first."""
         while self.leases:
             moved = self.release_leases(batch)
+            if moved == 0:
+                # every remaining lease is deferred across an active cut:
+                # resolution resumes after heal_partition()
+                break
             yield Timeout(self.handoff_time(moved) + pause)
+
+    # ------------------------------------------------------ network partitions
+    def _require_whole_view(self, what: str) -> None:
+        if self.partition_of:
+            raise RuntimeError(f"cluster is partitioned: {what} needs a "
+                               "global view — heal the cut first")
+
+    def partition(self, side: List[str], *,
+                  straddle: Optional[Dict[str, int]] = None) -> None:
+        """Cut the link matrix: groups in ``side`` land on side 1, every
+        other live group on side 0. ``straddle`` places ``k`` of a group's
+        ``n`` replicas on side 1 (its quorum side — if any — decides which
+        clients it can serve; a 50/50 split serves neither). A partition
+        gates availability only: no ownership moves, no churn event fires,
+        and routes stay valid, so :meth:`heal_partition` is a pure merge.
+        """
+        if self.partition_of:
+            raise RuntimeError("already partitioned — heal the cut first")
+        cut = set(side)
+        live = [gid for gid, g in self.groups.items() if not g["retired"]]
+        unknown = cut - set(live)
+        if unknown:
+            raise ValueError(
+                f"cannot cut unknown/retired groups: {sorted(unknown)}")
+        for gid, k in (straddle or {}).items():
+            if gid in cut:
+                raise ValueError(f"straddled group {gid} cannot also be "
+                                 "wholly on side 1")
+            if gid not in self.groups or self.groups[gid]["retired"]:
+                raise ValueError(f"cannot straddle unknown/retired {gid}")
+            n = self.groups[gid]["n"]
+            if not 0 < k < n:
+                raise ValueError(f"straddle must split {gid} (0 < k < {n})")
+        self.partition_of = {gid: 1 if gid in cut else 0 for gid in live}
+        self.partition_straddle = dict(straddle or {})
+        n1 = sum(self.partition_of.values())
+        self.partition_minority = 1 if n1 * 2 <= len(self.partition_of) else 0
+        self.partition_events.append((self.env.now, "cut"))
+
+    def heal_partition(self) -> None:
+        """Merge the two sides. Neither side promoted or stole ownership
+        during the cut (writes refused instead of failing over), so the
+        divergent views differ only in suspicion state: the stabilization
+        replay below is a no-op by construction and deferred cross-cut
+        leases simply resume draining."""
+        if not self.partition_of:
+            raise RuntimeError("not partitioned")
+        self.partition_of = {}
+        self.partition_straddle = {}
+        while not self.ring.stabilized:  # pragma: no cover — no-op replay
+            self.ring.stabilize()
+            self.ring.fix_fingers()
+        self.partition_events.append((self.env.now, "heal"))
+
+    def _group_side(self, gid: str) -> Optional[int]:
+        """Which side of the cut this group can commit quorums on.
+        ``None`` = neither (a straddled group whose replica majority
+        exists on no side — it must refuse every quorum op)."""
+        k = self.partition_straddle.get(gid)
+        if k is not None:
+            n = self.groups[gid]["n"]
+            if (n - k) * 2 > n:
+                return 0
+            if k * 2 > n:
+                return 1
+            return None
+        return self.partition_of.get(gid, 0)
+
+    # refusal codes: 0 allowed; 1 cross-cut (the key's authority sits on
+    # the other side); 2 no-quorum (authority straddles the cut with no
+    # replica majority on either side)
+    def _refusal_code(self, client_gid: str, key: str,
+                      is_write: bool) -> int:
+        cs = self._group_side(client_gid)
+        if cs is None:
+            return 2
+        lease = self.leases.get(key)
+        if lease is not None:
+            ds = self._group_side(lease[1])
+            if ds is None:
+                return 2
+            if ds != cs:
+                return 1
+            if not is_write and not lease[2]:
+                # a clean lease's value still sits at the source: the
+                # pull-on-demand read would have to cross the cut
+                ss = self._group_side(lease[0])
+                if ss is None:
+                    return 2
+                if ss != cs:
+                    return 1
+            return 0
+        owner_side = self._group_side(
+            self.group_of_gateway[self.ring.locate(key)])
+        if owner_side is None:
+            return 2
+        return 0 if owner_side == cs else 1
+
+    def _count_refusal(self, client_gid: str, is_write: bool,
+                       code: int) -> None:
+        self.refusals["writes" if is_write else "reads"] += 1
+        self.refusals["cross_cut" if code == 1 else "no_quorum"] += 1
+        minority = (self.partition_of.get(client_gid, 0)
+                    == self.partition_minority)
+        self.refusals["minority_side" if minority else "majority_side"] += 1
 
     # -------------------------------------------------------- fault injection
     def crash_group(self, gid: str) -> int:
@@ -372,6 +503,7 @@ class SimEdgeKV:
         pay extra hops, exactly the window the failover experiment
         measures. Returns the number of keys made unavailable.
         """
+        self._require_whole_view("membership change (crash_group)")
         g = self.groups[gid]
         if g["retired"]:
             raise ValueError(f"{gid} already retired")
@@ -434,6 +566,7 @@ class SimEdgeKV:
         their ring owners instead of bulk-promoted: a read pulls its key
         on demand (ending that key's unavailability early), the rest
         drain via :meth:`release_leases` — returns keys leased."""
+        self._require_whole_view("membership change (recover_group)")
         g = self.groups[gid]
         if not g["crashed"]:
             raise ValueError(f"{gid} is not a crashed group")
@@ -467,6 +600,40 @@ class SimEdgeKV:
         self.churn_events.append((self.env.now, "recover", gid, moved))
         return moved
 
+    def rejoin_group(self, gid: str) -> int:
+        """Re-join a recovered group under its OLD identity. Gateway vnode
+        positions are a pure hash of the gateway id
+        (:func:`repro.core.hashring.stable_hash`), so re-adding ``gw``
+        reclaims exactly the ring ranges it owned before the crash — the
+        returning node is not a fresh identity and causes no second
+        reshuffle. Global keys locating to the returning gateway are
+        pulled back from their interim owners; returns keys moved."""
+        self._require_whole_view("membership change (rejoin_group)")
+        g = self.groups[gid]
+        if not g["retired"] or g["crashed"]:
+            raise ValueError(f"{gid} is not a recovered (retired) group")
+        if self.leases:
+            self.release_leases()  # serialize behind an in-flight handoff
+        gw = self.gateway_of_group[gid]
+        self.ring.add_node(gw)
+        g["retired"] = False
+        if self._gateway_cache:
+            from repro.core.cache import LRUCache
+            self.gw_cache[gw] = LRUCache(self._gateway_cache)
+        self._invalidate_gw_caches()
+        moved = 0
+        dest = g["state"]
+        for other, og in self.groups.items():
+            if other == gid or og["retired"]:
+                continue
+            store = og["state"].stores[GLOBAL]
+            for key in [k for k in store if self.ring.locate(k) == gw]:
+                dest.apply(("put", GLOBAL, key, store[key]))
+                og["state"].apply(("delete", GLOBAL, key, None))
+                moved += 1
+        self.churn_events.append((self.env.now, "rejoin", gid, moved))
+        return moved
+
     @property
     def fault_events(self) -> List[Tuple[float, str, str, int]]:
         """Crash/recover entries of the churn log."""
@@ -477,6 +644,9 @@ class SimEdgeKV:
                            jitter: float = 0.1, payload: int = 64,
                            observer: Optional[str] = None,
                            until: Optional[Dict[str, float]] = None,
+                           outages: Optional[Dict[str, List[Tuple[float,
+                                                                  float]]]]
+                           = None,
                            ) -> Dict[str, np.ndarray]:
         """Seeded heartbeat arrival streams as a monitor gateway observes
         them over this setting's gw-gw link (Table 3).
@@ -487,7 +657,11 @@ class SimEdgeKV:
         then pays the deterministic Table-3 gw-gw transfer of a
         ``payload``-byte frame before the observer sees it. ``until`` cuts
         a gateway's stream at its crash instant (beats sent after it are
-        never observed). This is the traffic a :class:`PhiAccrualDetector`
+        never observed); ``outages`` drops beats whose send time falls in
+        any ``(t0, t1)`` window for that gateway — the cross-cut silence a
+        network partition imposes on the observer's view of the far side
+        (symmetric suspicion: build both directions' streams with the same
+        windows). This is the traffic a :class:`PhiAccrualDetector`
         at ``observer`` consumes — the detector-from-traffic harness the
         fault tests drive (false-positive bounds over real inter-arrival
         noise instead of the closed-form delay).
@@ -509,6 +683,8 @@ class SimEdgeKV:
             cut = (until or {}).get(gw)
             if cut is not None:
                 send = send[send <= cut]
+            for w0, w1 in (outages or {}).get(gw, []):
+                send = send[(send < w0) | (send >= w1)]
             out[gw] = np.sort(send) + delay
         return out
 
@@ -626,6 +802,20 @@ class SimEdgeKV:
                 fwd = self.rng.random() < (n - 1) / n
             if fwd:
                 yield Timeout(self.net.xfer("st_st", req))
+            if self.partition_straddle and \
+                    self._group_side(client_gid) is None:
+                # straddled client group with no replica majority on
+                # either side: every local quorum op (write commit or
+                # ReadIndex round) refuses — counted, non-mutating
+                self._count_refusal(client_gid, is_write, 2)
+                if fwd:
+                    yield Timeout(self.net.xfer("st_st", ERR_BYTES))
+                yield Timeout(self.net.xfer("cli_st", ERR_BYTES))
+                self.records.append(t0, self.env.now - t0,
+                                    KIND_CODE[op.kind],
+                                    DTYPE_CODE[op.dtype],
+                                    self.records.group_code(client_gid), 0)
+                return
             if is_write:
                 yield from self._group_write(client_gid, op, LOCAL)
             else:
@@ -636,6 +826,21 @@ class SimEdgeKV:
             # global: edge node -> local gateway -> Chord -> owner group
             gw = self.gateway_of_group[client_gid]
             yield Timeout(self.net.xfer("st_gw", req))
+            if self.partition_of:
+                code = self._refusal_code(client_gid, op.key, is_write)
+                if code:
+                    # split-brain refusal at the gateway-lookup instant:
+                    # the key's authority is across the cut (or has no
+                    # quorum side) — error ack back, nothing mutates, no
+                    # cache insert, no leader time
+                    self._count_refusal(client_gid, is_write, code)
+                    yield Timeout(self.net.xfer("st_gw", ERR_BYTES))
+                    yield Timeout(self.net.xfer("cli_st", ERR_BYTES))
+                    self.records.append(
+                        t0, self.env.now - t0, KIND_CODE[op.kind],
+                        DTYPE_CODE[op.dtype],
+                        self.records.group_code(client_gid), 0)
+                    return
             cached_owner = (self.gw_cache[gw].get(op.key)
                             if self.gw_cache else None)
             if cached_owner is not None:
@@ -783,13 +988,22 @@ class SimEdgeKV:
     def run_open_loop(self, *, rate_per_client: float, duration: float,
                       workload_kw: Optional[dict] = None,
                       client_groups: Optional[Tuple[str, ...]] = None,
+                      rate_profiles: Optional[Dict[str, List[Tuple[
+                          float, float, float]]]] = None,
                       ) -> None:
-        """Poisson arrivals at ``rate_per_client`` ops/s per client (Fig 13)."""
+        """Poisson arrivals at ``rate_per_client`` ops/s per client (Fig 13).
+
+        ``rate_profiles`` (scenario layer) maps a client gid to a list of
+        piecewise-constant ``(t_start, t_end, factor)`` rate-multiplier
+        segments relative to run start — flash-crowd surges and diurnal
+        rotation modulate the Poisson rate per segment (``factor <= 0``
+        silences the segment). Groups without a profile run flat.
+        """
         workload_kw = dict(workload_kw or {})
         if self.engine == "fast":
             from .vectorized import run_open_loop_fast
             run_open_loop_fast(self, rate_per_client, duration, workload_kw,
-                               client_groups)
+                               client_groups, rate_profiles)
             return
         for gi, gid in enumerate(list(self.groups)):
             if self.groups[gid]["retired"]:
@@ -798,19 +1012,46 @@ class SimEdgeKV:
                 continue
             wl = YCSBWorkload(seed=2000 + gi, **workload_kw)
             self.client_groups.add(gid)
-            self.env.process(self._arrivals(gid, wl, rate_per_client, duration))
+            self.env.process(self._arrivals(
+                gid, wl, rate_per_client, duration,
+                (rate_profiles or {}).get(gid)))
         self.env.run()
 
     def _arrival_seed(self, gid: str) -> int:
         return arrival_seed(self.seed, gid)
 
     def _arrivals(self, gid: str, wl: YCSBWorkload, rate: float,
-                  duration: float) -> Generator:
+                  duration: float,
+                  profile: Optional[List[Tuple[float, float, float]]] = None,
+                  ) -> Generator:
         rng = random.Random(self._arrival_seed(gid))
-        t_end = self.env.now + duration
-        while self.env.now < t_end:
-            yield Timeout(rng.expovariate(rate))
-            self.env.process(self.client_op(gid, wl.next_op()))
+        t_start = self.env.now
+        t_end = t_start + duration
+        if profile is None:
+            while self.env.now < t_end:
+                yield Timeout(rng.expovariate(rate))
+                self.env.process(self.client_op(gid, wl.next_op()))
+            return
+        # piecewise-constant rate multipliers (scenario layer): each
+        # segment restarts the exponential clock at its boundary — exact
+        # under the memoryless property, and it keeps every segment's
+        # draws a pure function of the seed and the segment list
+        for s0, s1, factor in profile:
+            seg_start, seg_end = t_start + s0, t_start + s1
+            if self.env.now < seg_start:
+                yield Timeout(seg_start - self.env.now)
+            if factor <= 0.0:
+                if self.env.now < seg_end:
+                    yield Timeout(seg_end - self.env.now)
+                continue
+            while True:
+                t_next = self.env.now + rng.expovariate(rate * factor)
+                if t_next >= seg_end:
+                    if self.env.now < seg_end:
+                        yield Timeout(seg_end - self.env.now)
+                    break
+                yield Timeout(t_next - self.env.now)
+                self.env.process(self.client_op(gid, wl.next_op()))
 
     # ------------------------------------------------------------- metrics
     def mean_latency(self, kind: Optional[str] = None,

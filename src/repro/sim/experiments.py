@@ -16,6 +16,8 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .cluster import ServiceParams, SimEdgeKV
 
 
@@ -402,6 +404,149 @@ def fig_scale(groups: int = 100, clients_per_group: int = 100,
         mean_hops=float(sim.records.columns()["hops"].mean()),
         walltime_s=wall,
     )]
+
+
+# ----------------------------------------------------------- fig scenarios
+def _scenario_row(name: str, sim: SimEdgeKV, wall: float,
+                  window: Optional[Tuple[float, float]] = None) -> dict:
+    """Common metric block for one scenario run: latency/throughput,
+    refusal breakdown, unavailability windows (partition cut->heal and
+    crash->recover), lost ops, and — when a surge ``window`` is given —
+    the p95/p99 over ops arriving inside it."""
+    cut_t = [t for t, ev in sim.partition_events if ev == "cut"]
+    heal_t = [t for t, ev in sim.partition_events if ev == "heal"]
+    pwin = [h - c for c, h in zip(cut_t, heal_t)]
+    crash_t = {g: t for t, ev, g, _ in sim.churn_events if ev == "crash"}
+    rec_t = {g: t for t, ev, g, _ in sim.churn_events if ev == "recover"}
+    fwin = [rec_t[g] - crash_t[g] for g in crash_t if g in rec_t]
+    row = dict(
+        scenario=name, engine=sim.engine, ops=len(sim.records),
+        mean_latency_ms=1e3 * sim.mean_latency(),
+        p95_latency_ms=1e3 * sim.tail_latency(95),
+        p99_latency_ms=1e3 * sim.tail_latency(99),
+        throughput_ops=sim.throughput(),
+        refused_writes=sim.refusals["writes"],
+        refused_reads=sim.refusals["reads"],
+        refused_cross_cut=sim.refusals["cross_cut"],
+        refused_no_quorum=sim.refusals["no_quorum"],
+        refused_minority_side=sim.refusals["minority_side"],
+        refused_majority_side=sim.refusals["majority_side"],
+        lost_ops=sim.lost_ops,
+        partition_unavailability_ms=1e3 * max(pwin) if pwin else 0.0,
+        failure_unavailability_ms=1e3 * max(fwin) if fwin else 0.0,
+        keys_rejoined=sum(n for _, ev, _, n in sim.churn_events
+                          if ev == "rejoin"),
+        walltime_s=wall,
+    )
+    if window is not None:
+        cols = sim.records.columns()
+        mask = (cols["t_start"] >= window[0]) & \
+               (cols["t_start"] < window[1])
+        if mask.any():
+            lat = cols["latency"][mask]
+            row["surge_p95_ms"] = 1e3 * float(np.percentile(lat, 95))
+            row["surge_p99_ms"] = 1e3 * float(np.percentile(lat, 99))
+            row["surge_ops"] = int(mask.sum())
+    return row
+
+
+def fig_scenarios(base_groups: int = 9, clients_per_group: int = 100,
+                  ops_per_client: int = 2000, p_global: float = 0.5,
+                  rate_per_client: float = 400.0, duration: float = 1.0,
+                  service: Optional[ServiceParams] = None,
+                  seed: int = 0, engine: str = "fast") -> List[dict]:
+    """Partition-aware scenario engine (this PR's tentpole): split-brain
+    cuts, correlated regional failures, flash crowds, and diurnal
+    geo-rotation as declarative :class:`~repro.sim.scenario.Scenario`
+    specs, on either engine.
+
+    Closed-loop rows (vs ``baseline_closed``):
+
+    * ``partition`` — a cut isolating the last three groups, with one
+      majority-side group's replicas straddling the cut 2/1. Clients on
+      both sides keep running: ops whose authority sits across the cut
+      are *refused* (counted, non-mutating error acks — never stale
+      reads, never split-brain writes), and the cut heals into a pure
+      merge (no key resurrected or double-owned; asserted by the
+      hypothesis machines in ``tests/test_lease_property.py``).
+    * ``regional_failure`` — the two client-free victim groups crash at
+      the same instant (one blast radius), detected via phi-accrual,
+      repaired, promoted, and finally **re-joined under their old
+      identities** (vnode positions are a pure hash of the gateway id).
+
+    Open-loop rows (vs ``baseline_open``): ``flash_crowd`` (4x surge on
+    a third of the clients; the surge window's p95/p99 is reported
+    separately) and ``diurnal`` (the 2.5x traffic peak rotates through
+    every region). Load shapes compile to piecewise-constant rate
+    profiles consumed identically by both engines.
+    """
+    from .scenario import (Diurnal, FlashCrowd, Partition,
+                           RegionalFailure, Scenario)
+    rows = []
+    gids = [f"g{i}" for i in range(base_groups)]
+    cut = tuple(gids[-3:])
+    straddled = gids[0]
+    closed = dict(
+        baseline_closed=Scenario("baseline_closed"),
+        partition=Scenario("partition", events=(
+            Partition(t_start=0.05, duration=0.2, side=cut,
+                      straddle=((straddled, 2),)),
+        )),
+    )
+    for name, sc in closed.items():
+        sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                        service=service, seed=seed, engine=engine)
+        sc.install(sim)
+        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        sim.run_closed_loop(
+            threads_per_client=clients_per_group,
+            ops_per_client=ops_per_client,
+            workload_kw=dict(p_global=p_global, n_records=5000))
+        rows.append(_scenario_row(name, sim, time.perf_counter() - t0))  # lint: ignore[EDK004] -- walltime reporting
+
+    # regional failure: victims join client-free (fig_failover pattern),
+    # crash together, recover, then re-join under their old identities
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                    service=service, seed=seed, engine=engine)
+    base = tuple(sim.groups)
+    victims = tuple(sim.add_group(3)[0] for _ in range(2))
+    Scenario("regional_failure", events=(
+        RegionalFailure(t_start=0.05, gids=victims, rejoin=True),
+    )).install(sim)
+    t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    sim.run_closed_loop(
+        threads_per_client=clients_per_group,
+        ops_per_client=ops_per_client,
+        workload_kw=dict(p_global=p_global, n_records=5000),
+        client_groups=base)
+    rows.append(_scenario_row("regional_failure", sim,
+                              time.perf_counter() - t0))  # lint: ignore[EDK004] -- walltime reporting
+
+    surge = (0.25 * duration, 0.55 * duration)
+    open_specs = dict(
+        baseline_open=Scenario("baseline_open"),
+        flash_crowd=Scenario("flash_crowd", events=(
+            FlashCrowd(t_start=surge[0], duration=surge[1] - surge[0],
+                       factor=4.0, gids=tuple(gids[:base_groups // 3])),
+        )),
+        diurnal=Scenario("diurnal", events=(
+            Diurnal(period=duration / base_groups, factor=2.5),
+        )),
+    )
+    for name, sc in open_specs.items():
+        sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
+                        service=service, seed=seed, engine=engine)
+        sc.install(sim)
+        profs = sc.profiles(sim, duration)
+        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        sim.run_open_loop(
+            rate_per_client=rate_per_client, duration=duration,
+            workload_kw=dict(p_global=p_global, n_records=5000),
+            rate_profiles=profs)
+        rows.append(_scenario_row(
+            name, sim, time.perf_counter() - t0,  # lint: ignore[EDK004] -- walltime reporting
+            window=surge if name == "flash_crowd" else None))
+    return rows
 
 
 # ------------------------------------------------------------- validation

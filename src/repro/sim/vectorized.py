@@ -304,9 +304,11 @@ class _FastEngine:
         # and always precomputable. Global ops go dynamic (two-phase
         # lookup events, resolved at gateway-lookup time) when the §7.2
         # location cache makes routing order-dependent OR any auxiliary
-        # process (churn/fault driver) can change membership mid-run —
-        # a route drawn before such an event must not outlive it.
-        self.dynamic = bool(sim.gw_cache) or bool(self.aux)
+        # process (churn/fault/scenario driver) can change membership or
+        # cut the network mid-run — a route (or refusal verdict) drawn
+        # before such an event must not outlive it.
+        self.dynamic = (bool(sim.gw_cache) or bool(self.aux)
+                        or bool(sim.partition_of))
         self.serving: List[int] = self.client_code.tolist()
         self.hops: List[int] = [0] * n_ops
         self.op_pre: List[tuple] = [()] * n_ops
@@ -513,6 +515,26 @@ class _FastEngine:
                 # gateway lookup of a dynamically-routed global op:
                 # resolve against the membership in force NOW, then queue
                 # the leader arrival (remaining request-chain terms)
+                if sim.partition_of:
+                    w = is_w[i]
+                    cgid = self.gid_of[self._l_client[i]]
+                    code = sim._refusal_code(cgid, op_key[i], w)
+                    if code:
+                        # split-brain refusal at the lookup instant
+                        # (oracle hook position): error ack chain back,
+                        # no route resolution, no leader time, hops=0
+                        sim._count_refusal(cgid, w, code)
+                        c = a + dm.sg_req[0]
+                        c += dm.c_req[0]
+                        latency[i] = c - t_start[i]
+                        completion[i] = c
+                        if c > max_completion:
+                            max_completion = c
+                        nxt = i + 1
+                        if nxt < thread_end[tau]:
+                            cursor[tau] = nxt
+                            push_op(nxt, tau, c)
+                        continue
                 self._resolve(i)
                 w = is_w[i]
                 h = dm.h_req[w]
@@ -521,6 +543,26 @@ class _FastEngine:
                 a += dm.sg_req[w]
                 arrival_phase[tau] = True
                 push(heap, (a, pid, tau))
+                continue
+            if sim.partition_straddle and not dtypes[i] and \
+                    sim._group_side(self.gid_of[self._l_client[i]]) is None:
+                # straddled client group with no replica majority on
+                # either side: local quorum ops refuse at the leader
+                # arrival instant (oracle hook position)
+                cgid = self.gid_of[self._l_client[i]]
+                sim._count_refusal(cgid, is_w[i], 2)
+                c = a
+                if self._l_fwd[i]:
+                    c += dm.f_req[0]
+                c += dm.c_req[0]
+                latency[i] = c - t_start[i]
+                completion[i] = c
+                if c > max_completion:
+                    max_completion = c
+                nxt = i + 1
+                if nxt < thread_end[tau]:
+                    cursor[tau] = nxt
+                    push_op(nxt, tau, c)
                 continue
             if leases and dtypes[i]:
                 # lease-resolution phase (third heap phase): a global op
@@ -681,12 +723,19 @@ def completion_chain(xp, dep, q_or_ri, sg_resp, g_resp, f_resp, c_resp,
 
 # ----------------------------------------------------- open-loop pieces
 def _open_loop_segments(clients, rate: float, duration: float, now: float,
-                        workload_kw: dict) -> List[tuple]:
+                        workload_kw: dict,
+                        profiles: Optional[Dict[int, List[tuple]]] = None,
+                        ) -> List[tuple]:
     """Per-client-group open-loop op schedules, identical draws for the
     fast engine and the sweep engine.
 
     ``clients`` rows are ``(group_code, gi, n, arrival_seed)``; returns
     ``(code, workload, t0, key_idx, kind, dtype, fwd)`` per group.
+    ``profiles`` (scenario layer) maps a client *code* to piecewise-
+    constant ``(t_start, t_end, factor)`` rate-multiplier segments
+    relative to run start: each segment draws its own exponential stream
+    at ``rate * factor`` (memoryless restart at segment boundaries,
+    mirroring the oracle's per-segment clock).
     """
     segs = []
     for code, gi, n, aseed in clients:
@@ -695,15 +744,36 @@ def _open_loop_segments(clients, rate: float, duration: float, now: float,
             continue
         rng = np.random.default_rng(np.random.SeedSequence(
             [(2000 + gi) & 0xFFFFFFFF, aseed]))
-        # arrival k fires iff arrival k-1 lands before t_end (oracle's
-        # while-loop semantics), so one arrival may overshoot duration
-        t = np.empty(0)
-        chunk = max(64, int(rate * duration * 1.2) + 8)
-        while t.size == 0 or t[-1] < duration:
-            e = rng.exponential(1.0 / rate, size=chunk)
-            t = np.concatenate([t, (t[-1] if t.size else 0.0) + np.cumsum(e)])
-        count = int(np.searchsorted(t, duration, side="left")) + 1
-        t0 = t[:count] + now  # arrivals start at current virtual time
+        profile = (profiles or {}).get(code)
+        if profile is None:
+            # arrival k fires iff arrival k-1 lands before t_end (oracle's
+            # while-loop semantics), so one arrival may overshoot duration
+            t = np.empty(0)
+            chunk = max(64, int(rate * duration * 1.2) + 8)
+            while t.size == 0 or t[-1] < duration:
+                e = rng.exponential(1.0 / rate, size=chunk)
+                t = np.concatenate(
+                    [t, (t[-1] if t.size else 0.0) + np.cumsum(e)])
+            count = int(np.searchsorted(t, duration, side="left")) + 1
+            t0 = t[:count] + now  # arrivals start at current virtual time
+        else:
+            parts = []
+            for s0, s1, factor in profile:
+                if factor <= 0.0:
+                    continue
+                seg_len = s1 - s0
+                r = rate * factor
+                t = np.empty(0)
+                chunk = max(64, int(r * seg_len * 1.2) + 8)
+                while t.size == 0 or t[-1] < seg_len:
+                    e = rng.exponential(1.0 / r, size=chunk)
+                    t = np.concatenate(
+                        [t, (t[-1] if t.size else 0.0) + np.cumsum(e)])
+                parts.append(t[t < seg_len] + s0)
+            t0 = (np.concatenate(parts) if parts else np.empty(0)) + now
+            count = len(t0)
+            if not count:
+                continue
         key_idx, kind, dtype = wl.batch_ops(count, rng)
         fwd = ((dtype == LOCAL_CODE)
                & (rng.random(count) < (n - 1) / n))
@@ -793,14 +863,36 @@ def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
                      key_idx: np.ndarray, keys: List[str],
                      is_w: np.ndarray, glob: np.ndarray,
                      dtype: np.ndarray,
-                     pen: Optional[np.ndarray] = None) -> None:
+                     pen: Optional[np.ndarray] = None,
+                     refused: Optional[np.ndarray] = None) -> None:
     """Resolve routes and apply writes for one churn epoch's ops (already
     in schedule order) against the *current* ring membership — the
     open-loop analogue of the closed-loop engine's lazy ``_resolve``.
     ``pen`` collects per-op delay penalties (lease pull transfers) that
-    feed into the arrival chain."""
+    feed into the arrival chain; ``refused`` (bool, len n_ops) marks ops
+    a partition active during this epoch refuses — counted here,
+    excluded from routing/write-apply/lease-pull, completed with the
+    error-ack chain by the caller."""
     if not len(idxs):
         return
+    if refused is not None and sim.partition_of:
+        gids = sim.records._group_ids
+        for i in idxs.tolist():
+            cgid = gids[client[i]]
+            if glob[i]:
+                code = sim._refusal_code(cgid, keys[key_idx[i]],
+                                         bool(is_w[i]))
+            elif sim.partition_straddle and \
+                    sim._group_side(cgid) is None:
+                code = 2
+            else:
+                code = 0
+            if code:
+                refused[i] = True
+                sim._count_refusal(cgid, bool(is_w[i]), code)
+        idxs = idxs[~refused[idxs]]
+        if not len(idxs):
+            return
     ids = sim.records._group_ids
     gw_of_code = [sim.gateway_of_group[g] for g in ids]
     gsel = idxs[glob[idxs]]
@@ -875,6 +967,8 @@ def _route_and_apply(sim: SimEdgeKV, idxs: np.ndarray, client: np.ndarray,
 def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                        workload_kw: dict,
                        client_groups: Optional[Tuple[str, ...]] = None,
+                       rate_profiles: Optional[Dict[str, List[tuple]]]
+                       = None,
                        ) -> None:
     """Fully batched open-loop run (Fig 13): exogenous Poisson arrivals
     mean there is no closed-loop feedback, so the leader stage resolves in
@@ -895,16 +989,21 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     gcode = sim.records.group_code
 
     clients = []
+    prof_by_code: Dict[int, List[tuple]] = {}
     for gi, gid in enumerate(list(sim.groups)):
         if sim.groups[gid]["retired"]:
             continue
         if client_groups is not None and gid not in client_groups:
             continue
         sim.client_groups.add(gid)
-        clients.append((gcode(gid), gi, sim.groups[gid]["n"],
+        code = gcode(gid)
+        clients.append((code, gi, sim.groups[gid]["n"],
                         sim._arrival_seed(gid)))
+        profile = (rate_profiles or {}).get(gid)
+        if profile is not None:
+            prof_by_code[code] = profile
     segs = _open_loop_segments(clients, rate, duration, sim.env.now,
-                               workload_kw)
+                               workload_kw, profiles=prof_by_code or None)
     if not segs and not aux:
         return
 
@@ -930,6 +1029,8 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     hops = np.zeros(n_ops, dtype=np.int32)
 
     pen = np.zeros(n_ops) if aux else None
+    refused = (np.zeros(n_ops, bool)
+               if (aux or sim.partition_of) else None)
     if aux:
         # membership-event segmentation: ops whose gateway *lookup* lands
         # before an aux event route (and commit writes) under the
@@ -947,7 +1048,7 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
             te, pid = heapq.heappop(heap)
             end = int(np.searchsorted(t_sorted, te, side="left"))
             _route_and_apply(sim, order_t[pos:end], client, serving, hops,
-                             key_idx, keys, is_w, glob, dtype, pen)
+                             key_idx, keys, is_w, glob, dtype, pen, refused)
             pos = end
             sim.env.now = te
             gen = aux[pid]
@@ -961,9 +1062,17 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                                     "only yield Timeout")
                 heapq.heappush(heap, (te + ev.delay, pid))
         _route_and_apply(sim, order_t[pos:], client, serving, hops,
-                         key_idx, keys, is_w, glob, dtype, pen)
+                         key_idx, keys, is_w, glob, dtype, pen, refused)
         if not n_ops:
             return
+    elif refused is not None:
+        # a partition installed before the run and never healed: one
+        # whole-run epoch — refusal verdicts, routing, and write apply
+        # all resolve against the (static) cut membership
+        had_aux = True  # writes applied here, not in the LRU replay
+        order_t = np.argsort(t0, kind="stable")
+        _route_and_apply(sim, order_t, client, serving, hops,
+                         key_idx, keys, is_w, glob, dtype, pen, refused)
     elif glob.any():
         # routing: one Chord route per unique (gateway, successor-vnode)
         # class; with a §7.2 location cache, consult/populate the
@@ -1009,13 +1118,15 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
         arr = arr + pen
 
     # leader stage: per-group LRU replay + max-plus departure scan in
-    # arrival order (writes were already applied per epoch under churn)
+    # arrival order (writes were already applied per epoch under churn).
+    # Refused ops never reach a leader: no page-cache touch, no service.
     ids = sim.records._group_ids
-    dep = np.empty(n_ops)
+    dep = np.zeros(n_ops)
     svc_base = np.where(is_w, dm.svc_base[1], dm.svc_base[0])
-    for g in np.unique(serving).tolist():
+    alive = ~refused if refused is not None else np.ones(n_ops, bool)
+    for g in np.unique(serving[alive]).tolist():
         grp = sim.groups[ids[g]]
-        sel = np.nonzero(serving == g)[0]
+        sel = np.nonzero((serving == g) & alive)[0]
         order = sel[np.lexsort((sel, arr[sel]))]
         pens = _replay_page_cache(grp, keys, key_idx[order], is_w[order],
                                   dtype[order], dm.seek,
@@ -1031,6 +1142,18 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     comp = completion_chain(np, dep, q_or_ri, by_w(dm.sg_resp),
                             by_w(dm.g_resp), by_w(dm.f_resp),
                             by_w(dm.c_resp), lf, glob, remote)
+    if refused is not None and refused.any():
+        # refused ops complete with the error-ack chain instead: refusal
+        # instant (client link, fwd hop, gateway lookup — wherever the
+        # op was turned back) plus the header-only error hops home
+        err_cli, err_f, err_sg = dm.c_req[0], dm.f_req[0], dm.sg_req[0]
+        t_ref = t0 + by_w(dm.c_req)
+        t_ref = np.where(lf, t_ref + by_w(dm.f_req), t_ref)
+        t_ref = np.where(glob, t_ref + by_w(dm.sg_req), t_ref)
+        comp_ref = np.where(glob, t_ref + err_sg,
+                            np.where(lf, t_ref + err_f, t_ref)) + err_cli
+        comp = np.where(refused, comp_ref, comp)
+        hops = np.where(refused, 0, hops).astype(np.int32)
 
     order = np.lexsort((np.arange(n_ops), comp))
     sim.records.extend_columns(t0[order], (comp - t0)[order], kind[order],

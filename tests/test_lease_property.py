@@ -6,11 +6,13 @@ Two machines, >= 200 hypothesis examples each:
   retarget / release sequences against :class:`repro.core.lease.LeaseTable`
   — accounting and uniqueness invariants;
 * a **cluster interleaving machine** (the PR-4 membership machine extended
-  with async handoff): random interleavings of client writes/deletes with
-  add/remove/crash/stabilize/recover/step_handoff, leases in flight across
-  every membership event — invariants: zero lost acknowledged writes, zero
-  double-applied writes (exactly-one-owner), every lease eventually
-  released or aborted, refusals non-mutating.
+  with async handoff and, this PR, network partitions): random
+  interleavings of client writes/deletes with add/remove/crash/stabilize/
+  recover/step_handoff plus partition/heal, leases in flight across every
+  membership event and cuts landing mid-drain — invariants: zero lost
+  acknowledged writes, zero double-applied writes (exactly-one-owner),
+  every lease eventually released or aborted, refusals (membership *and*
+  cross-cut client ops) non-mutating, no key resurrected by a heal.
 
 Runs under real hypothesis or the deterministic fallback shim in
 ``tests/conftest.py``.
@@ -94,11 +96,12 @@ def _owners(c, keys):
        st.integers(0, 3))
 def test_cluster_interleavings_with_inflight_leases(seq, seed):
     """Arbitrary interleavings of put/delete/get with async
-    add/remove/crash/recover/stabilize/step_handoff: after settling, no
-    acknowledged write is lost, nothing is double-applied (each key held
-    by exactly its ring owner), deleted keys stay deleted, every lease
-    was released or aborted, and every refused operation left the cluster
-    intact."""
+    add/remove/crash/recover/stabilize/step_handoff and partition/heal:
+    after settling, no acknowledged write is lost, nothing is
+    double-applied (each key held by exactly its ring owner), deleted
+    keys stay deleted, every lease was released or aborted, and every
+    refused operation — membership change under a cut, cross-cut client
+    op — left the cluster intact."""
     c = EdgeKVCluster([1] * 3, seed=seed, backup_groups=True,
                       backup_depth=2)
     model = {}
@@ -116,19 +119,32 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
     def any_client():
         return next(iter(c.groups))
 
+    def authority(k):
+        lease = c.leases.get(k)
+        if lease is not None:
+            return lease.dst
+        return c.gateways[c.ring.locate(k)].group.id
+
+    def aligned_client(k):
+        """A client group that can reach ``k``'s authority: any group
+        when no cut is active, the authority's own group during one
+        (same side by construction — cuts gate availability, not
+        ownership, so the authority never moves mid-cut)."""
+        return any_client() if c.partition_of is None else authority(k)
+
     for step in seq:
-        r = step % 8
+        r = step % 10
         live = [g for g in c.groups if g not in c.draining]
         if r == 0:  # put (fresh or overwrite)
             pool = sorted(model) + [f"w/{serial}"]
             k = pool[step % len(pool)]
             serial += 1
-            assert c.put(k, step, GLOBAL, client_group=any_client()).ok
+            assert c.put(k, step, GLOBAL, client_group=aligned_client(k)).ok
             model[k] = step
             deleted.discard(k)
         elif r == 1 and model:  # delete
             k = sorted(model)[step % len(model)]
-            c.delete(k, GLOBAL, client_group=any_client())
+            assert c.delete(k, GLOBAL, client_group=aligned_client(k)).ok
             model.pop(k)
             deleted.add(k)
         elif r == 2 and not c.dead_groups:
@@ -137,10 +153,15 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
             pool = sorted(model) + sorted(deleted)
             if pool:
                 k = pool[step % len(pool)]
-                got = c.get(k, GLOBAL, client_group=any_client()).value
+                got = c.get(k, GLOBAL, client_group=aligned_client(k)).value
                 assert got == model.get(k), (k, got, model.get(k))
         elif r == 3 and len(c.groups) < 7:
-            c.add_group(1, async_handoff=bool(step & 1))
+            before = set(c.groups)
+            try:
+                c.add_group(1, async_handoff=bool(step & 1))
+            except RuntimeError:  # membership needs a whole view
+                assert c.partition_of is not None
+                assert set(c.groups) == before
         elif r == 4 and len(live) > 2:
             victim = live[step % len(live)]
             before = set(c.groups)
@@ -166,14 +187,36 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
             else:
                 c.ring.stabilize()
                 c.ring.fix_fingers()
+        elif r == 8:  # cut the network (leases may be mid-flight)
+            if c.partition_of is None and len(live) >= 2 \
+                    and not c.dead_groups and not c.draining:
+                c.partition(live[1::2])
+            if c.partition_of is not None and model:
+                # a cross-cut write must refuse — counted, non-mutating
+                # (the final model check proves the old value survived)
+                k = sorted(model)[step % len(model)]
+                a_side = c._quorum_side_of[authority(k)]
+                far = [g for g in c.groups
+                       if c._quorum_side_of.get(g) not in (None, a_side)]
+                if far:
+                    res = c.put(k, step + 1_000_000, GLOBAL,
+                                client_group=far[step % len(far)])
+                    assert not res.ok
+        elif r == 9 and c.partition_of is not None:
+            refusals_before = dict(c.refusals)
+            c.heal_partition()  # pure merge: replay, not arbitration
+            assert c.refusals == refusals_before
+            assert c.partition_of is None and c.ring.stabilized
         # a fresh acknowledged write survives whatever just happened
         k = f"a/{serial}"
         serial += 1
-        assert c.put(k, serial, GLOBAL, client_group=any_client()).ok
+        assert c.put(k, serial, GLOBAL, client_group=aligned_client(k)).ok
         model[k] = serial
         assert c.leases.balanced()
 
-    # settle: recover every pending crash, drain every lease
+    # settle: heal any open cut, recover every pending crash, drain leases
+    if c.partition_of is not None:
+        c.heal_partition()
     for gid in list(c.dead_groups):
         c.recover_group(gid, async_handoff=bool(seed & 1))
     c.drain_handoff()
@@ -182,6 +225,10 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
     assert c.pending_handoff == 0
     assert c.leases.balanced()  # every lease released or aborted
     assert c.ring.stabilized
+    assert c.partition_of is None
+    # refusal accounting: every refused op has exactly one cause
+    assert (c.refusals["put"] + c.refusals["get"] + c.refusals["delete"]
+            == c.refusals["cross_cut"] + c.refusals["no_quorum"])
 
     survivor = next(iter(c.groups))
     lost = {k for k, v in model.items()
