@@ -169,6 +169,83 @@ def bench_sweep():
     _write_json()
 
 
+def bench_closed_sweep():
+    """PR 8 headline: the 16-point closed-loop grid as ONE jitted
+    batched fixed-point program (repro.sim.sweep, loop="closed") vs
+    looping the numpy fast engine over the same grid, plus the
+    per-device scaling of the sharded program.  Each device count runs
+    in its own subprocess because XLA fixes the host platform device
+    count at first jax init."""
+    import os
+    import subprocess
+
+    from repro.sim.cluster import SimEdgeKV
+    from repro.sim.sweep import closed_grid, run_sweep
+
+    grid = closed_grid(threads=500, ops=1000)
+    t0 = time.perf_counter()
+    run_sweep(grid, loop="closed", seed=0)   # cold: includes jit compile
+    t_cold = time.perf_counter() - t0
+
+    def sweep_once():
+        t0 = time.perf_counter()
+        run_sweep(grid, loop="closed", seed=0)
+        return time.perf_counter() - t0
+
+    def loop_once():
+        t0 = time.perf_counter()
+        for p in grid:
+            sim = SimEdgeKV(setting="edge", seed=0,
+                            group_sizes=(p.group_size,) * p.groups,
+                            engine="fast")
+            sim.run_closed_loop(threads_per_client=p.threads,
+                                ops_per_client=p.ops,
+                                workload_kw=dict(
+                                    p_global=p.p_global,
+                                    distribution=p.distribution,
+                                    n_records=p.n_records))
+            (sim.mean_latency(), sim.mean_latency(kind="update"),
+             sim.throughput(), sim.tail_latency(95), sim.tail_latency(99))
+        return time.perf_counter() - t0
+
+    sweep_once()
+    t_loop, t_sweep = [], []
+    for _ in range(3):
+        t_loop.append(loop_once())
+        t_sweep.append(sweep_once())
+    t_loop, t_sweep = min(t_loop), min(t_sweep)
+    _row("sim.closed_sweep_speedup", f"{t_loop / t_sweep:.1f}",
+         f"points={len(grid)};loop_s={t_loop:.2f};sweep_s={t_sweep:.2f};"
+         f"cold_s={t_cold:.2f}")
+
+    child = (
+        "import json, time\n"
+        "import jax\n"
+        "from repro.sim.sweep import closed_grid, run_sweep\n"
+        "grid = closed_grid(threads=500, ops=1000)\n"
+        "d = min(%d, jax.local_device_count())\n"
+        "run_sweep(grid, loop='closed', seed=0, devices=d)\n"
+        "t0 = time.perf_counter()\n"
+        "run_sweep(grid, loop='closed', seed=0, devices=d)\n"
+        "print(json.dumps(dict(devices=d,"
+        " warm_s=time.perf_counter() - t0)))\n")
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    for d in (1, 2, 4, 8):
+        env = dict(
+            os.environ, PYTHONPATH=src,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={d}")
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c", child % d], env=env, text=True,
+                capture_output=True, timeout=600, check=True)
+            r = json.loads(out.stdout.strip().splitlines()[-1])
+            _row(f"sim.per_device_scaling.d{d}", f"{r['warm_s']:.2f}",
+                 f"devices={r['devices']};points={len(grid)};warm run")
+        except Exception as e:  # pragma: no cover - bench robustness
+            _row(f"sim.per_device_scaling.d{d}", "nan", str(e)[:80])
+    _write_json()
+
+
 def bench_fig_churn():
     """Elastic gateway churn: 10 groups / 1000 clients, static vs churn."""
     from repro.sim.experiments import fig_churn
@@ -292,6 +369,27 @@ def bench_fig_scale():
              f"p99={r['p99_latency_ms']:.2f}")
         _row("fig_scale.throughput_ops", f"{r['throughput_ops']:.0f}")
         _row("fig_scale.walltime_s", f"{r['walltime_s']:.2f}")
+
+
+def bench_fig_scale_1m():
+    """ROADMAP item 1: 1000 groups x 1000 threads = 1M simulated clients
+    through the closed-loop sweep engine (one jitted fixed point, ~5M
+    ops).  page_cache_keys covers the whole keyspace so every leader
+    stays in the in-program (no-eviction) LRU regime."""
+    from repro.sim.cluster import ServiceParams
+    from repro.sim.experiments import fig_scale
+    for r in fig_scale(groups=1000, clients_per_group=1000,
+                       ops_per_client=5000, engine="sweep",
+                       service=ServiceParams(page_cache_keys=10_000)):
+        d = (f"groups={r['groups']};clients={r['clients']};ops={r['ops']};"
+             f"engine={r['engine']};mean_hops={r['mean_hops']:.2f}")
+        _row("fig_scale_1m.write_latency_ms",
+             f"{r['write_latency_ms']:.2f}", d)
+        _row("fig_scale_1m.p95_latency_ms", f"{r['p95_latency_ms']:.2f}",
+             f"p99={r['p99_latency_ms']:.2f}")
+        _row("fig_scale_1m.throughput_ops", f"{r['throughput_ops']:.0f}")
+        _row("fig_scale_1m.walltime_s", f"{r['walltime_s']:.2f}")
+    _write_json()
 
 
 def bench_engine_speedup():
@@ -491,11 +589,13 @@ def main() -> None:
     bench_energy()
     bench_engine_speedup()
     _timed("sweep", bench_sweep)
+    _timed("closed_sweep", bench_closed_sweep)
     _timed("fig_churn", bench_fig_churn)
     _timed("fig_failover", bench_fig_failover)
     _timed("fig_handoff", bench_fig_handoff)
     _timed("fig_scenarios", bench_fig_scenarios)
     _timed("fig_scale", bench_fig_scale)
+    _timed("fig_scale_1m", bench_fig_scale_1m)
     _timed("headline_claims", bench_headline_claims)
     _timed("fig5_6", bench_fig5_6_locality)
     _timed("fig7_8", bench_fig7_8_distributions)

@@ -1,10 +1,17 @@
 """Pallas TPU kernel for the batched max-plus departure scan.
 
 Rows are independent sequences (one per (simulation config, group) in a
-sweep); the grid's chunk dimension is *sequential*: a (1, 1) departure
-carry lives in VMEM scratch and is handed chunk to chunk — TPU grid
-iteration is row-major, so ``(r, c)`` runs all chunks of one row
-consecutively and the carry stays private to each row.
+sweep); the grid's chunk dimension is *sequential*: a departure carry
+lives in VMEM scratch and is handed chunk to chunk — TPU grid iteration
+is row-major, so ``(r, c)`` runs all chunks of one row block
+consecutively and the carry stays private to each block.
+
+The row axis is itself a grid axis blocked by ``block_rows``: a sweep's
+whole (config, group) row stack scans in one ``pallas_call``, with
+``block_rows`` rows sharing each grid step so the (8, 128) VPU lanes
+stay filled for short rows.  An optional per-row ``init`` seeds the
+carry (a leader that is already busy at t=0 — e.g. chaining membership
+epochs); without it the carry starts at -inf (idle leader).
 
 Per chunk the recurrence ``d_i = max(a_i, d_{i-1}) + s_i`` unrolls to
 
@@ -15,46 +22,62 @@ ops (one cumsum, one cummax), no MXU traffic.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _mp_kernel(a_ref, s_ref, o_ref, carry_ref):
-    ci = pl.program_id(1)
-
-    @pl.when(ci == 0)
-    def _init():
-        carry_ref[...] = jnp.full_like(carry_ref, -jnp.inf)
-
-    a = a_ref[...]                         # (1, C)
-    s = s_ref[...]                         # (1, C)
+def _mp_body(a_ref, s_ref, o_ref, carry_ref):
+    a = a_ref[...]                         # (B, C)
+    s = s_ref[...]                         # (B, C)
     S = jnp.cumsum(s, axis=1)
     z = a - (S - s)                        # a_j - exclusive cumsum
     zc = jax.lax.cummax(z, axis=1)
-    d = S + jnp.maximum(zc, carry_ref[...])   # carry broadcasts (1,1)->(1,C)
+    d = S + jnp.maximum(zc, carry_ref[...])   # carry broadcasts (B,1)->(B,C)
     o_ref[...] = d
     carry_ref[...] = d[:, -1:]
 
 
+def _mp_kernel(a_ref, s_ref, o_ref, carry_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, -jnp.inf)
+
+    _mp_body(a_ref, s_ref, o_ref, carry_ref)
+
+
+def _mp_kernel_init(x0_ref, a_ref, s_ref, o_ref, carry_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        carry_ref[...] = x0_ref[...]
+
+    _mp_body(a_ref, s_ref, o_ref, carry_ref)
+
+
 def maxplus_depart_kernel(arrive: jax.Array, svc: jax.Array, *,
-                          chunk: int = 256,
+                          init: jax.Array | None = None,
+                          chunk: int = 256, block_rows: int = 1,
                           interpret: bool = False) -> jax.Array:
-    """arrive/svc: (R, L) with L a multiple of ``chunk``. Returns (R, L)
-    departures. Rows are independent (the carry resets per row)."""
+    """arrive/svc: (R, L) with L a multiple of ``chunk`` and R a multiple
+    of ``block_rows``. Returns (R, L) departures. Rows are independent
+    (the carry resets per row, to ``init[r]`` when given, else -inf)."""
     R, L = arrive.shape
     assert L % chunk == 0, (L, chunk)
-    grid = (R, L // chunk)
-    blk = pl.BlockSpec((1, chunk), lambda r, c: (r, c))
-    return pl.pallas_call(
-        functools.partial(_mp_kernel),
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows, L // chunk)
+    blk = pl.BlockSpec((block_rows, chunk), lambda r, c: (r, c))
+    kw = dict(
         grid=grid,
-        in_specs=[blk, blk],
         out_specs=blk,
         out_shape=jax.ShapeDtypeStruct((R, L), arrive.dtype),
-        scratch_shapes=[pltpu.VMEM((1, 1), arrive.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_rows, 1), arrive.dtype)],
         interpret=interpret,
-    )(arrive, svc)
+    )
+    if init is None:
+        return pl.pallas_call(_mp_kernel, in_specs=[blk, blk],
+                              **kw)(arrive, svc)
+    blk0 = pl.BlockSpec((block_rows, 1), lambda r, c: (r, 0))
+    x0 = jnp.asarray(init, arrive.dtype).reshape(R, 1)
+    return pl.pallas_call(_mp_kernel_init, in_specs=[blk0, blk, blk],
+                          **kw)(x0, arrive, svc)

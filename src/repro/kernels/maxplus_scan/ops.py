@@ -90,9 +90,17 @@ def _numpy_seg(a, s, init):
 
 def maxplus_depart(arrive, svc, reset=None, *, init=None,
                    backend: str = "auto", chunk: int = 256,
+                   block_rows: int = 1,
                    interpret: bool | None = None):
     """Departure times for the leader-stage recurrence.  (..., L) in,
-    (..., L) out; see module docstring for the backends."""
+    (..., L) out; see module docstring for the backends.
+
+    ``block_rows`` (pallas only) blocks the batched row axis of the
+    kernel grid: ``block_rows`` rows share one grid step, so a sweep's
+    whole (config, group) row stack scans in one ``pallas_call`` with
+    the VPU lanes filled even for short rows.  ``init`` seeds each row's
+    carry (idle leader = -inf); supported on every backend.
+    """
     if backend == "auto":
         concrete = isinstance(arrive, np.ndarray) or not isinstance(
             arrive, jax.Array)
@@ -105,10 +113,10 @@ def maxplus_depart(arrive, svc, reset=None, *, init=None,
         return maxplus_depart_ref(arrive, svc, reset=reset, init=init)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
-    if reset is not None or init is not None:
+    if reset is not None:
         raise NotImplementedError(
             "the pallas backend segments by row; pre-split sequences into "
-            "rows instead of passing reset/init")
+            "rows instead of passing reset")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     a = jnp.asarray(arrive)
@@ -124,7 +132,23 @@ def maxplus_depart(arrive, svc, reset=None, *, init=None,
         # recurrence just carries the last departure forward
         a2 = jnp.pad(a2, ((0, 0), (0, pad)))
         s2 = jnp.pad(s2, ((0, 0), (0, pad)))
-    out = maxplus_depart_kernel(a2, s2, chunk=chunk, interpret=interpret)
+    x0 = None
+    if init is not None:
+        x0 = jnp.broadcast_to(jnp.asarray(init, a.dtype),
+                              shape[:-1]).reshape(-1)
+    R = a2.shape[0]
+    block_rows = max(1, min(block_rows, R))
+    rpad = (-R) % block_rows
+    if rpad:
+        # rows are independent, so trailing zero rows are inert
+        a2 = jnp.pad(a2, ((0, rpad), (0, 0)))
+        s2 = jnp.pad(s2, ((0, rpad), (0, 0)))
+        if x0 is not None:
+            x0 = jnp.pad(x0, (0, rpad), constant_values=-jnp.inf)
+    out = maxplus_depart_kernel(a2, s2, init=x0, chunk=chunk,
+                                block_rows=block_rows, interpret=interpret)
+    if rpad:
+        out = out[:R]
     if pad:
         out = out[:, :L]
     return out.reshape(shape)

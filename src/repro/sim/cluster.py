@@ -49,7 +49,8 @@ from __future__ import annotations
 import random
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, Generator, List, Optional, Set, Tuple
+from typing import (Any, Dict, Generator, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
@@ -104,6 +105,41 @@ class ThreadPlan:
     kind: np.ndarray      # uint8 KIND_CODE
     dtype: np.ndarray     # uint8 DTYPE_CODE
     fwd: np.ndarray       # bool: contacted edge node is not the leader
+
+
+def closed_loop_plan(clients: Sequence[Tuple[int, str, int]],
+                     threads_per_client: int, ops_per_client: int,
+                     workload_kw: dict, seed_offset: int,
+                     ) -> List[ThreadPlan]:
+    """Pre-generate every worker thread's op schedule in bulk.
+
+    ``clients`` rows are ``(gi, gid, n)`` — the group's *spawn index*
+    (seeds are a function of spawn order), id, and replication size.
+    One numpy stream per group, drawn in a single ``batch_ops`` call and
+    sliced per thread — the schedule is a pure function of the seeds
+    (never of event interleaving).  Module-level so the closed-loop
+    sweep engine draws streams identical to a :class:`SimEdgeKV` run
+    without instantiating one; the workload's seed-derived state
+    (keyspace strings, hotset permutation, zipf CDF) is memoized inside
+    :mod:`repro.sim.ycsb` and shared across every caller.
+    """
+    plan: List[ThreadPlan] = []
+    per_thread = max(1, ops_per_client // threads_per_client)
+    total = per_thread * threads_per_client
+    for gi, gid, n in clients:
+        wl_seed = 1000 + gi + seed_offset
+        wl = YCSBWorkload(seed=wl_seed, **workload_kw)
+        fwd_p = (n - 1) / n
+        rng = np.random.default_rng(
+            np.random.SeedSequence([wl_seed & 0xFFFFFFFF]))
+        key_idx, kind, dtype = wl.batch_ops(total, rng)
+        fwd = ((dtype == DTYPE_CODE["local"])
+               & (rng.random(total) < fwd_p))
+        for t in range(threads_per_client):
+            s = slice(t * per_thread, (t + 1) * per_thread)
+            plan.append(ThreadPlan(gid, wl, key_idx[s], kind[s],
+                                   dtype[s], fwd[s]))
+    return plan
 
 
 class SimEdgeKV:
@@ -924,31 +960,22 @@ class SimEdgeKV:
         seeds (never of event interleaving), identical for both engines.
         ``client_groups`` restricts which groups host load generators
         (fault experiments keep crash victims client-free); group seeds
-        stay a function of spawn order either way.
+        stay a function of spawn order either way.  Plan generation
+        itself lives in the module-level :func:`closed_loop_plan` shared
+        with the sweep engine.
         """
-        plan: List[ThreadPlan] = []
+        clients: List[Tuple[int, str, int]] = []
+        per_thread = max(1, ops_per_client // threads_per_client)
         for gi, gid in enumerate(list(self.groups)):
             if self.groups[gid]["retired"]:
                 continue
             if client_groups is not None and gid not in client_groups:
                 continue
-            wl_seed = 1000 + gi + seed_offset
-            wl = YCSBWorkload(seed=wl_seed, **workload_kw)
-            per_thread = max(1, ops_per_client // threads_per_client)
+            clients.append((gi, gid, self.groups[gid]["n"]))
             self.client_ops[gid] = per_thread * threads_per_client
             self.client_groups.add(gid)
-            fwd_p = (self.groups[gid]["n"] - 1) / self.groups[gid]["n"]
-            rng = np.random.default_rng(
-                np.random.SeedSequence([wl_seed & 0xFFFFFFFF]))
-            total = per_thread * threads_per_client
-            key_idx, kind, dtype = wl.batch_ops(total, rng)
-            fwd = ((dtype == DTYPE_CODE["local"])
-                   & (rng.random(total) < fwd_p))
-            for t in range(threads_per_client):
-                s = slice(t * per_thread, (t + 1) * per_thread)
-                plan.append(ThreadPlan(gid, wl, key_idx[s], kind[s],
-                                       dtype[s], fwd[s]))
-        return plan
+        return closed_loop_plan(clients, threads_per_client,
+                                ops_per_client, workload_kw, seed_offset)
 
     def run_closed_loop(self, *, threads_per_client: int = 100,
                         ops_per_client: int = 10_000,

@@ -373,15 +373,44 @@ def fig_failover(base_groups: int = 10, clients_per_group: int = 100,
 def fig_scale(groups: int = 100, clients_per_group: int = 100,
               ops_per_client: int = 1000, p_global: float = 0.5,
               service: Optional[ServiceParams] = None,
-              seed: int = 0, engine: str = "fast") -> List[dict]:
+              seed: int = 0, engine: str = "fast",
+              devices: int = 1) -> List[dict]:
     """Beyond-paper scale: 100 groups × 100 threads = 10k closed-loop
-    clients at 50% global data.
+    clients at 50% global data by default; ``engine="sweep"`` runs the
+    same scenario through the batched closed-loop fixed point
+    (:func:`repro.sim.sweep.run_sweep`), which is what pushes this figure
+    to 1000 groups × 1000 threads = 1M simulated clients (optionally
+    sharded over ``devices``).
 
-    This is the scenario the vectorized engine unlocks — the generator
-    oracle spends ~10 heap events per op across 10k generators, an order
-    of magnitude more wall clock than the batched path. Deterministic for
-    a given seed (and bit-identical across engines, no churn here).
+    This is the scenario the vectorized engines unlock — the generator
+    oracle spends ~10 heap events per op across the generators, orders
+    of magnitude more wall clock than the batched paths. Deterministic
+    for a given seed (and bit-identical across engines, no churn here).
     """
+    if engine == "sweep":
+        from .sweep import SweepPoint, run_sweep
+        point = SweepPoint(p_global=p_global, groups=groups, group_size=3,
+                           threads=clients_per_group, ops=ops_per_client)
+        # closed-loop schedules are seeded by seed_offset (0 in the fast
+        # branch below), not the sim seed — pass 0 so both engines draw
+        # the identical schedule regardless of `seed`
+        res = run_sweep([point], loop="closed", seed=0,
+                        service=service, devices=devices)
+        c = res.columns
+        return [dict(
+            engine=f"sweep(x{devices})" if devices > 1 else "sweep",
+            groups=groups, clients=groups * clients_per_group,
+            ops=int(c["ops"][0]),
+            write_latency_ms=1e3 * float(c["update_latency"][0]),
+            read_latency_ms=1e3 * float(c["read_latency"][0]),
+            global_write_latency_ms=1e3 * float(
+                c["update_global_latency"][0]),
+            p95_latency_ms=1e3 * float(c["p95_latency"][0]),
+            p99_latency_ms=1e3 * float(c["p99_latency"][0]),
+            throughput_ops=float(c["throughput"][0]),
+            mean_hops=float(c["mean_hops"][0]),
+            walltime_s=res.walltime_s,
+        )]
     sim = SimEdgeKV(setting="edge", group_sizes=(3,) * groups,
                     service=service, seed=seed, engine=engine)
     t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting

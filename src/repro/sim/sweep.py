@@ -1,11 +1,32 @@
-"""Batched parameter sweeps: N EdgeKV open-loop simulations as ONE jitted
-JAX array program.
+"""Batched parameter sweeps: N EdgeKV simulations as ONE jitted JAX
+array program — open loop (exogenous Poisson arrivals) and closed loop
+(think-time feedback, the regime every paper figure actually uses).
 
 EdgeKV's evaluation (§6) is a grid of scenarios — workload mix x
 local/global ratio x load x topology — and with the fast engine each grid
 point still costs a separate numpy pass.  This module compiles the whole
 grid instead: :func:`run_sweep` takes a list of :class:`SweepPoint`
 configurations and evaluates them in a single ``jax.jit`` call.
+
+Closed loop (``run_sweep(..., loop="closed")``): a worker thread's next
+arrival is its previous completion (zero think time), so arrival times
+are no longer exogenous — they are the *fixed point* of the coupled
+recurrence in which threads interact only through each serving leader's
+FIFO commit stage (the max-plus scan) and its LRU page cache.  The
+program iterates a batched round to that fixed point inside one
+``lax.while_loop``: completions -> next arrivals (elementwise
+:func:`~repro.sim.vectorized.arrival_chain`) -> per-row stable sort into
+leader-arrival order (ties broken by flat position = the heap engine's
+pid order) -> seen-before page penalties -> batched max-plus departure
+scan -> completions (:func:`~repro.sim.vectorized.completion_chain`).
+Unresolved ops (predecessor not yet computed) carry ``+inf`` arrivals,
+which sorts them harmlessly after every resolved op, so each round
+extends the resolved wavefront by at least one op per thread and the
+iteration converges — bitwise — in O(ops-per-thread) rounds.  The true
+schedule is a fixed point of the round map, so extra rounds are no-ops;
+that is what makes the multi-device program (``devices=N`` shards the
+point axis with ``jax.shard_map``, ``pmap`` fallback) bit-identical to
+the single-device one even though shards converge at different rounds.
 
 Layout: the grid is flattened to **one row per (config, serving group)**
 — the granularity at which the leader FIFO serializes — with ops in
@@ -16,12 +37,14 @@ engine (:func:`repro.sim.vectorized.arrival_chain` /
 per-config component tables) and the batch axis of the max-plus
 departure scan from :mod:`repro.kernels.maxplus_scan`
 (``jax.lax.associative_scan`` by default, the Pallas kernel with
-``scan_backend="pallas"``), so the program needs no in-program
-gather/scatter at all.  Per-row masked category reductions come back as
-batched aggregates; :class:`SweepResult` folds them into per-point
-columns — mean latencies by kind/dtype, paper-metric throughput,
-p95/p99 tails — the :class:`~repro.sim.records.RecordArray` aggregate
-shape lifted to a whole grid.
+``scan_backend="pallas"``), so the open-loop program needs no in-program
+gather/scatter at all (the closed-loop rounds gather/scatter because the
+order itself is part of the fixed point).  Per-row masked category
+reductions come back as batched aggregates; :class:`SweepResult` folds
+them into per-point columns — mean latencies by kind/dtype, paper-metric
+throughput, p95/p99 tails — the
+:class:`~repro.sim.records.RecordArray` aggregate shape lifted to a
+whole grid.
 
 Only the parts that are inherently host-side stay in numpy: drawing the
 op schedules (the numpy RNG streams must match the fast engine draw for
@@ -51,11 +74,19 @@ from jax.experimental import enable_x64
 from repro.core.hashring import ChordRing, stable_hash
 from repro.kernels.maxplus_scan import maxplus_depart
 
-from .cluster import ServiceParams, arrival_seed
+from .cluster import ServiceParams, arrival_seed, closed_loop_plan
 from .network import SETTINGS
 from .vectorized import (GLOBAL_CODE, READ_CODE, _DelayModel,
                          _open_loop_segments, arrival_chain,
-                         completion_chain, lru_hit_mask)
+                         completion_chain, lru_hit_mask, plan_columns)
+
+try:  # moved between jax versions; the sweep degrades to pmap without it
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    try:
+        from jax import shard_map  # type: ignore[attr-defined]
+    except ImportError:
+        shard_map = None
 
 _PAIRS = ("c_req", "c_resp", "f_req", "f_resp", "sg_req", "sg_resp",
           "h_req", "g_resp", "svc_base")
@@ -63,13 +94,21 @@ _PAIRS = ("c_req", "c_resp", "f_req", "f_resp", "sg_req", "sg_resp",
 
 @dataclass(frozen=True)
 class SweepPoint:
-    """One open-loop configuration in a sweep grid."""
+    """One configuration in a sweep grid.
+
+    ``rate`` drives open-loop points; ``threads`` / ``ops`` (worker
+    threads per client group, total ops per client group — the
+    ``run_closed_loop`` knobs) drive closed-loop points.  The unused
+    axis is simply ignored by the other loop mode.
+    """
     p_global: float = 0.5
     rate: float = 200.0
     groups: int = 3
     n_records: int = 10_000
     distribution: str = "uniform"
     group_size: int = 3
+    threads: int = 100
+    ops: int = 10_000
 
 
 def sweep_grid(p_globals: Sequence[float] = (0.0, 0.25, 0.5, 0.75),
@@ -87,6 +126,21 @@ def sweep_grid(p_globals: Sequence[float] = (0.0, 0.25, 0.5, 0.75),
                        group_size=group_size)
             for pg, nr, r, g in product(p_globals, contention, rates,
                                         groups)]
+
+
+def closed_grid(p_globals: Sequence[float] = (0.0, 0.25, 0.5, 1.0),
+                contention: Sequence[int] = (10_000, 2_500),
+                groups: Sequence[int] = (3, 5),
+                distribution: str = "uniform", group_size: int = 3,
+                threads: int = 32, ops: int = 320) -> List[SweepPoint]:
+    """A §6-style *closed-loop* grid: local/global ratio x contention x
+    group count, each point a ``run_closed_loop`` configuration
+    (``threads`` workers per client group sharing ``ops`` operations).
+    Defaults to 4 x 2 x 2 = 16 points."""
+    return [SweepPoint(p_global=pg, n_records=int(nr), groups=int(g),
+                       distribution=distribution, group_size=group_size,
+                       threads=int(threads), ops=int(ops))
+            for pg, nr, g in product(p_globals, contention, groups)]
 
 
 @dataclass
@@ -168,6 +222,21 @@ class _Topology:
         return owner_u[inv], hops_u[inv]
 
 
+# one shared topology per (group count, vnodes) for the whole *process*:
+# the ring is a pure function of the gateway names, so the open- and
+# closed-loop sweep paths (and repeated run_sweep calls) reuse the same
+# key->vnode maps and route-class memos instead of re-deriving them
+_TOPOLOGIES: Dict[Tuple[int, int], _Topology] = {}
+
+
+def _topology(groups: int, virtual_nodes: int) -> _Topology:
+    topo = _TOPOLOGIES.get((groups, virtual_nodes))
+    if topo is None:
+        topo = _TOPOLOGIES[(groups, virtual_nodes)] = _Topology(
+            groups, virtual_nodes)
+    return topo
+
+
 @lru_cache(maxsize=None)
 def _compiled(max_hops: int, scan_backend: str, interpret: bool):
     """Build + jit the grid program for one static shape family.
@@ -232,26 +301,76 @@ def _compiled(max_hops: int, scan_backend: str, interpret: bool):
 def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
               setting: str = "edge", seed: int = 0,
               service: Optional[ServiceParams] = None,
-              virtual_nodes: int = 1, scan_backend: str = "assoc",
+              virtual_nodes: int = 1, scan_backend: Optional[str] = None,
               interpret: Optional[bool] = None,
-              percentiles: Sequence[float] = (95.0, 99.0)) -> SweepResult:
-    """Evaluate an open-loop sweep grid in a single jitted array program.
+              percentiles: Sequence[float] = (95.0, 99.0),
+              loop: str = "open", devices: int = 1,
+              max_rounds: Optional[int] = None) -> SweepResult:
+    """Evaluate a sweep grid in a single jitted array program.
 
-    Each :class:`SweepPoint` reproduces exactly what
-    ``SimEdgeKV(setting=setting, group_sizes=(group_size,)*groups,
-    seed=seed, engine="fast").run_open_loop(rate, duration, workload_kw)``
-    would record — same schedules, routes, penalties, and float64 delay
+    ``loop="open"`` (default): each :class:`SweepPoint` reproduces
+    exactly what ``SimEdgeKV(setting=setting,
+    group_sizes=(group_size,)*groups, seed=seed,
+    engine="fast").run_open_loop(rate, duration, workload_kw)`` would
+    record — same schedules, routes, penalties, and float64 delay
     arithmetic — but the grid shares one compiled program, one ring per
-    group count, and one batched departure scan.  ``scan_backend``
-    selects the leader-stage scan: ``"assoc"``
-    (``jax.lax.associative_scan``) or ``"pallas"`` (the TPU kernel;
-    interpret mode off-TPU).
+    group count, and one batched departure scan.
+
+    ``loop="closed"``: each point reproduces
+    ``run_closed_loop(threads_per_client=p.threads,
+    ops_per_client=p.ops, workload_kw=..., seed_offset=seed)`` on the
+    same fast-engine sim (closed-loop schedules are seeded by
+    ``seed_offset``, so ``seed`` plays that role here; ``duration`` and
+    ``p.rate`` are ignored).  The whole grid runs as one batched
+    fixed-point iteration (see the module docstring), sharded over the
+    point axis with ``devices`` > 1 (``jax.shard_map``, ``pmap``
+    fallback; on CPU raise the device count with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    ``max_rounds`` caps the fixed-point iteration (default: generous in
+    ops-per-thread); non-convergence raises instead of returning wrong
+    numbers.  Grids whose (config, group) rows can evict page-cache
+    entries (distinct keys at one leader exceeding
+    ``service.page_cache_keys``) fall back to an equivalent host-side
+    fixed point with the exact LRU replay
+    (:func:`~repro.sim.vectorized.lru_hit_mask`).
+
+    ``scan_backend`` selects the leader-stage scan.  ``None`` (default)
+    resolves per loop mode: ``"assoc"`` (``jax.lax.associative_scan``,
+    closed-form) for open loop, ``"seq"`` (``lax.scan``, the engine's
+    exact sequential float association) for closed loop.  ``"pallas"``
+    uses the TPU kernel, batched over rows (interpret mode off-TPU).
+    The closed loop defaults to ``"seq"`` because its fixed point feeds
+    completions back into *queue ordering*: the closed-form scans
+    reassociate float adds, and a 1-ulp deviation can flip the order of
+    two near-tied arrivals and snowball into a genuinely different
+    schedule — harmless ulps in the open loop, percent-level metric
+    drift in the closed loop.  ``"assoc"``/``"pallas"`` remain valid for
+    closed loop where ulp-exactness is not required (self-consistent
+    schedules, same fixed-point semantics).
     """
     points = [points] if isinstance(points, SweepPoint) else list(points)
     if not points:
         raise ValueError("empty sweep grid")
     if duration <= 0:
         raise ValueError("duration must be positive")
+    if loop not in ("open", "closed"):
+        raise ValueError(f"unknown loop mode {loop!r}")
+    if devices < 1:
+        raise ValueError("devices must be >= 1")
+    if scan_backend is None:
+        scan_backend = "seq" if loop == "closed" else "assoc"
+    if scan_backend not in ("seq", "assoc", "pallas"):
+        raise ValueError(f"unknown scan_backend {scan_backend!r}")
+    if loop == "open" and scan_backend == "seq":
+        raise ValueError("scan_backend='seq' is closed-loop only")
+    if loop == "closed":
+        return _run_closed(points, setting=setting, seed=seed,
+                           service=service, virtual_nodes=virtual_nodes,
+                           scan_backend=scan_backend, interpret=interpret,
+                           percentiles=percentiles, devices=devices,
+                           max_rounds=max_rounds)
+    if devices != 1:
+        raise ValueError("devices > 1 requires loop='closed'")
     t_wall = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
     svcp = service or ServiceParams()
     dm = _DelayModel(SETTINGS[setting], svcp)
@@ -259,7 +378,6 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
     qs = tuple(float(q) for q in percentiles)
 
     # ---- host side: schedules, routes, penalties (seed-exact numpy) ----
-    topos: Dict[int, _Topology] = {}
     cols_op: Dict[str, List[np.ndarray]] = {
         k: [] for k in ("t0", "pens", "is_w", "glob", "lf", "remote",
                         "hops", "client")}
@@ -268,9 +386,7 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
     row_tbl: List[int] = []          # per row: owning point
     offset = 0
     for pi, p in enumerate(points):
-        topo = topos.get(p.groups)
-        if topo is None:
-            topo = topos[p.groups] = _Topology(p.groups, virtual_nodes)
+        topo = _topology(p.groups, virtual_nodes)
         clients = [(c, c, p.group_size, arrival_seed(seed, f"g{c}"))
                    for c in range(p.groups)]
         segs = _open_loop_segments(
@@ -401,6 +517,447 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
         if qs:
             tails[:, pi] = np.percentile(lat_pt, qs)
     cols["throughput"] = thr
+    for q, t in zip(qs, tails):
+        cols[f"p{q:g}_latency"] = t
+    return SweepResult(points, cols, time.perf_counter() - t_wall)  # lint: ignore[EDK004] -- walltime reporting
+
+
+# ===================================================== closed-loop sweep
+def _closed_point_build(p: SweepPoint, seed: int, dm: _DelayModel,
+                        capacity: int, virtual_nodes: int) -> dict:
+    """Host-side build of one closed-loop point: the exact schedules,
+    routes, and per-op delay components a ``SimEdgeKV(engine="fast")``
+    closed-loop run would use (shared extraction:
+    :func:`~repro.sim.cluster.closed_loop_plan` +
+    :func:`~repro.sim.vectorized.plan_columns`), flattened in (thread,
+    op) order — the order that defines heap pid tie-breaks."""
+    plan = closed_loop_plan([(gi, f"g{gi}", p.group_size)
+                             for gi in range(p.groups)],
+                            p.threads, p.ops,
+                            dict(p_global=p.p_global,
+                                 distribution=p.distribution,
+                                 n_records=p.n_records), seed)
+    cols = plan_columns(plan, lambda gid: int(gid[1:]))
+    client, key_idx = cols["client"], cols["key_idx"]
+    bounds = cols["bounds"]
+    n = int(bounds[-1])
+    is_w = cols["kind"] != READ_CODE
+    glob = cols["dtype"] == GLOBAL_CODE
+    serving = client.copy()
+    hops = np.zeros(n, np.int32)
+    if glob.any():
+        topo = _topology(p.groups, virtual_nodes)
+        owner, h = topo.routes(client[glob], key_idx[glob],
+                               plan[0].wl.keys)
+        serving[glob] = owner
+        hops[glob] = h
+    lf = (~glob) & cols["fwd"]
+    remote = glob & (serving != client)
+
+    def bw(pair):
+        return np.where(is_w, pair[1], pair[0])
+
+    first = np.zeros(n, bool)
+    first[bounds[:-1]] = True
+    flat = dict(
+        c_req=bw(dm.c_req), f_req=bw(dm.f_req), sg_req=bw(dm.sg_req),
+        h_req=bw(dm.h_req), sg_resp=bw(dm.sg_resp), g_resp=bw(dm.g_resp),
+        f_resp=bw(dm.f_resp), c_resp=bw(dm.c_resp),
+        svc_base=np.where(is_w, dm.svc_base[1], dm.svc_base[0]),
+        q_ri=np.where(is_w, dm.quorum(p.group_size),
+                      dm.readindex(p.group_size)),
+        lf=lf, glob=glob, remote=remote, first=first, hops=hops,
+        pred=np.maximum(np.arange(n, dtype=np.int64) - 1, 0),
+        key=key_idx.astype(np.int64))
+
+    # one row per serving group; a stable sort keyed by serving group
+    # keeps members in ascending flat index = (pid, op) order, which is
+    # what breaks exact arrival ties the way the heap engine's
+    # (arrival, pid) tuples do
+    order = np.argsort(serving, kind="stable")
+    sv = serving[order]
+    cuts = np.flatnonzero(sv[1:] != sv[:-1]) + 1
+    rows: List[np.ndarray] = []
+    evict = False
+    for members in (np.split(order, cuts) if n else []):
+        rows.append(members.astype(np.int64))
+        # eviction is order-independent: a leader's LRU can only evict
+        # when it ever holds more distinct keys than its capacity
+        if np.unique(key_idx[members]).size > capacity:
+            evict = True
+    return dict(flat=flat, rows=rows, n=n, client=client, is_w=is_w,
+                glob=glob, hops=hops, evict=evict,
+                per_thread=max(1, p.ops // max(1, p.threads)),
+                max_hops=int(hops.max()) if n else 0)
+
+
+def _closed_assemble(blocks: Sequence[dict]) -> dict:
+    """Concatenate per-point builds into one device block, rebasing the
+    flat op index space (``pred`` and row members shift by offset)."""
+    flat: Dict[str, np.ndarray] = {}
+    for k in blocks[0]["flat"]:
+        parts, off = [], 0
+        for b in blocks:
+            v = b["flat"][k]
+            parts.append(v + off if k == "pred" else v)
+            off += b["n"]
+        flat[k] = np.concatenate(parts)
+    rows: List[np.ndarray] = []
+    off = 0
+    for b in blocks:
+        rows.extend(m + off for m in b["rows"])
+        off += b["n"]
+    return dict(flat=flat, rows=rows, n=off)
+
+
+def _closed_pad(blk: dict, n_max: int, R_max: int, Ls_max: int
+                ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """Pad one device block to the fleet-wide shapes and precompute the
+    static queue geometry the round program exploits.
+
+    Row membership and keys never change across rounds — only arrival
+    *values* do — so everything except the order within each row is
+    known here, on the host, once:
+
+    * ``row``  — each op's row (queue) id; pad ops get the one-past-end
+      row so a single stable composite sort by ``(row, arrival)`` in op
+      space replaces the padded per-row argsort (real ops only — no
+      O(R*Ls) slot padding in the sort).
+    * ``rank``/``dest`` — sorted *position* -> (queue rank, slot in the
+      rectangular scan grid).  Row sizes are static, so position ``p``
+      always lands in the same row at the same rank; the sorted
+      arrivals scatter into the (R, Ls) max-plus grid through these
+      static indices (pad positions index out of bounds and drop).
+    * ``seg``  — segment id of each op's (row, key) group, so the
+      seen-before LRU mask reduces to one ``segment_min`` over queue
+      ranks instead of a sort-by-key round trip.
+
+    Padding is inert by construction: pad ops are first-ops with
+    all-zero delay columns (their completions converge to a constant in
+    one round), sort after every real row, and never enter the scan
+    grid — their departures gather the out-of-bounds fill."""
+    n, pad = blk["n"], n_max - blk["n"]
+    flat = {}
+    for k, v in blk["flat"].items():
+        if pad:
+            fill = np.full(pad, k == "first") if v.dtype == bool \
+                else np.zeros(pad, v.dtype)
+            v = np.concatenate([v, fill])
+        flat[k] = v
+    flat["pred"] = flat["pred"].astype(np.int32)
+    row_of = np.full(n_max, R_max, np.int32)
+    rank = np.zeros(n_max, np.int32)
+    dest = np.full(n_max, R_max * Ls_max, np.int32)
+    off = 0
+    for r, m in enumerate(blk["rows"]):
+        row_of[m] = r
+        rank[off:off + len(m)] = np.arange(len(m), dtype=np.int32)
+        dest[off:off + len(m)] = r * Ls_max + np.arange(len(m),
+                                                        dtype=np.int32)
+        off += len(m)
+    comp_key = (row_of.astype(np.int64) * (int(flat["key"].max()) + 2)
+                + flat["key"] + 1)
+    seg = np.unique(comp_key, return_inverse=True)[1].astype(np.int32)
+    aux = dict(row=row_of, rank=rank, dest=dest, seg=seg)
+    return flat, aux
+
+
+@lru_cache(maxsize=None)
+def _closed_round_fn(max_hops: int, scan_backend: str, interpret: bool,
+                     max_rounds: int, seek: float, R: int, Ls: int):
+    """The raw (unjitted) fixed-point program for one device block."""
+
+    def one_round(comp, flat, aux):
+        n = comp.shape[0]
+        t0 = jnp.where(flat["first"], 0.0,
+                       jnp.take(comp, flat["pred"], mode="clip"))
+        arr = arrival_chain(jnp, t0, flat["c_req"], flat["f_req"],
+                            flat["sg_req"], flat["h_req"], flat["lf"],
+                            flat["glob"], flat["hops"], max_hops)
+        # one stable composite sort of the real ops by (row, arrival)
+        # recovers every leader queue at once: stability breaks exact
+        # arrival ties by flat index = (pid, op) order, the heap
+        # engine's tie-break, and pad ops sort after every real row
+        _, arr_ord, perm = jax.lax.sort(
+            (aux["row"], arr, jnp.arange(n, dtype=jnp.int32)),
+            num_keys=2, is_stable=True)
+        # seen-before page penalties (the no-eviction LRU regime): an op
+        # hits iff a same-key op sits earlier in its queue, i.e. its
+        # rank exceeds the min rank of its static (row, key) segment;
+        # ranks per sorted position are static (row sizes don't change)
+        seg_ord = jnp.take(aux["seg"], perm)
+        rmin = jax.ops.segment_min(aux["rank"], seg_ord, num_segments=n)
+        pens = jnp.where(aux["rank"] > rmin[seg_ord], 0.0, seek)
+        svc_ord = jnp.take(flat["svc_base"], perm) + pens
+        # leader FIFO commit stage: scatter the ordered queues into the
+        # rectangular (R, Ls) grid through the static position -> slot
+        # map (uncovered slots stay +inf/0 and are never gathered back)
+        # and run the batched max-plus departure scan.  "seq" reproduces
+        # the engine's exact sequential float association (required for
+        # the <=1e-9 differential contract — see run_sweep); the
+        # closed-form backends are ulp-reassociated
+        grid_a = jnp.full((R * Ls,), jnp.inf, arr.dtype).at[
+            aux["dest"]].set(arr_ord, mode="drop").reshape(R, Ls)
+        grid_s = jnp.zeros((R * Ls,), arr.dtype).at[
+            aux["dest"]].set(svc_ord, mode="drop").reshape(R, Ls)
+        if scan_backend == "pallas":
+            dep_grid = maxplus_depart(grid_a, grid_s, backend="pallas",
+                                      block_rows=8, interpret=interpret)
+        elif scan_backend == "assoc":
+            dep_grid = maxplus_depart(grid_a, grid_s, backend="assoc")
+        else:
+            dep_grid = maxplus_depart(grid_a, grid_s, backend="ref")
+        dep_ord = jnp.take(dep_grid.reshape(-1), aux["dest"],
+                           mode="fill", fill_value=0.0)
+        dep = jnp.zeros((n,), comp.dtype).at[perm].set(dep_ord)
+        return completion_chain(jnp, dep, flat["q_ri"], flat["sg_resp"],
+                                flat["g_resp"], flat["f_resp"],
+                                flat["c_resp"], flat["lf"], flat["glob"],
+                                flat["remote"])
+
+    def run(flat, aux):
+        n = flat["c_req"].shape[0]
+        comp0 = jnp.full((n,), jnp.inf, jnp.float64)  # lint: ignore[EDK104] -- every caller traces under enable_x64 (see _run_closed)
+
+        def cond(carry):
+            _, done, r = carry
+            return jnp.logical_and(jnp.logical_not(done), r < max_rounds)
+
+        def body(carry):
+            comp, _, r = carry
+            new = one_round(comp, flat, aux)
+            return new, jnp.all(new == comp), r + 1
+
+        comp, done, rounds = jax.lax.while_loop(
+            cond, body, (comp0, jnp.asarray(False), jnp.asarray(0)))
+        t0 = jnp.where(flat["first"], 0.0,
+                       jnp.take(comp, flat["pred"], mode="clip"))
+        return comp, t0, done, rounds
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _closed_exe(max_hops: int, scan_backend: str, interpret: bool,
+                max_rounds: int, seek: float, R: int, Ls: int,
+                devices: int, impl: str):
+    """Cached executable wrappers (jit / shard_map / pmap) around the
+    round program — cached so repeat sweeps reuse the compiled program.
+    """
+    run = _closed_round_fn(max_hops, scan_backend, interpret, max_rounds,
+                           seek, R, Ls)
+    if impl == "jit":
+        return jax.jit(run)
+    if impl == "pmap":
+        return jax.pmap(run)
+    from jax.sharding import Mesh, PartitionSpec
+
+    mesh = Mesh(np.asarray(jax.devices()[:devices]), ("pt",))
+    spec = PartitionSpec("pt")
+
+    def shard_fn(flat, aux):
+        comp, t0, done, r = run({k: v[0] for k, v in flat.items()},
+                                {k: v[0] for k, v in aux.items()})
+        return comp[None], t0[None], done[None], r[None]
+
+    # check_rep off: each shard runs its own data-dependent while_loop
+    # trip count (idempotent past its fixed point, so shards that
+    # converge early stay bit-identical to the single-device program)
+    return jax.jit(shard_map(shard_fn, mesh=mesh,
+                             in_specs=(spec, spec),
+                             out_specs=(spec, spec, spec, spec),
+                             check_rep=False))
+
+
+def _closed_rounds_host(built: Sequence[dict], capacity: int, seek: float,
+                        max_hops: int, max_rounds: int
+                        ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+    """Host-side fixed point for grids in the eviction regime: same
+    rounds, same float64 expressions, but page penalties come from the
+    exact LRU replay (:func:`~repro.sim.vectorized.lru_hit_mask`, stack
+    distances and all) instead of the in-program seen-before mask."""
+    comp_pt, t0_pt = [], []
+    for b in built:
+        flat, n = b["flat"], b["n"]
+        comp = np.full(n, np.inf)
+        t0 = np.zeros(n)
+        for _ in range(max_rounds):
+            t0 = np.where(flat["first"], 0.0, comp[flat["pred"]])
+            arr = arrival_chain(np, t0, flat["c_req"], flat["f_req"],
+                                flat["sg_req"], flat["h_req"],
+                                flat["lf"], flat["glob"], flat["hops"],
+                                max_hops)
+            dep = np.zeros(n)
+            for m in b["rows"]:
+                order = m[np.argsort(arr[m], kind="stable")]
+                hitm = lru_hit_mask(flat["key"][order], capacity)
+                svc = flat["svc_base"][order] + np.where(hitm, 0.0, seek)
+                arr_o = arr[order].tolist()
+                svc_o = svc.tolist()
+                dep_o = np.empty(len(order))
+                d = -np.inf
+                # sequential recurrence in the engine's exact float
+                # order (start = max(a, free); dep = start + svc) —
+                # the closed-form numpy scan reassociates and its ulp
+                # drift can flip near-tied queue orders across rounds
+                for j, (a_j, s_j) in enumerate(zip(arr_o, svc_o)):
+                    d = (a_j if a_j > d else d) + s_j
+                    dep_o[j] = d
+                dep[order] = dep_o
+            new = completion_chain(np, dep, flat["q_ri"],
+                                   flat["sg_resp"], flat["g_resp"],
+                                   flat["f_resp"], flat["c_resp"],
+                                   flat["lf"], flat["glob"],
+                                   flat["remote"])
+            if np.array_equal(new, comp):
+                break
+            comp = new
+        else:
+            raise RuntimeError(
+                f"closed-loop sweep did not converge in {max_rounds} "
+                "rounds (host/LRU path); raise max_rounds")
+        comp_pt.append(comp)
+        t0_pt.append(t0)
+    return comp_pt, t0_pt
+
+
+def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
+                service: Optional[ServiceParams], virtual_nodes: int,
+                scan_backend: str, interpret: Optional[bool],
+                percentiles: Sequence[float], devices: int,
+                max_rounds: Optional[int]) -> SweepResult:
+    t_wall = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    for p in points:
+        if p.threads < 1 or p.ops < 1:
+            raise ValueError(
+                "closed-loop points need threads >= 1 and ops >= 1")
+    svcp = service or ServiceParams()
+    dm = _DelayModel(SETTINGS[setting], svcp)
+    capacity = max(1, svcp.page_cache_keys)
+    qs = tuple(float(q) for q in percentiles)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    built = [_closed_point_build(p, seed, dm, capacity, virtual_nodes)
+             for p in points]
+    max_hops = max(b["max_hops"] for b in built)
+    if max_rounds is None:
+        # the resolved wavefront advances >= 1 op per thread per round;
+        # the slack covers order corrections rippling between threads
+        max_rounds = 4 * max(b["per_thread"] for b in built) + 64
+    seek = float(dm.seek)
+    args = (max_hops, scan_backend, bool(interpret), int(max_rounds),
+            seek)
+
+    if any(b["evict"] for b in built):
+        comp_pt, t0_pt = _closed_rounds_host(built, capacity, seek,
+                                             max_hops, max_rounds)
+    elif devices == 1:
+        blk = _closed_assemble(built)
+        R = len(blk["rows"])
+        Ls = max(len(m) for m in blk["rows"])
+        flat, aux = _closed_pad(blk, blk["n"], R, Ls)
+        with enable_x64():
+            comp, t0f, done, _ = jax.device_get(_closed_exe(
+                *args, R, Ls, 1, "jit")(
+                {k: jnp.asarray(v) for k, v in flat.items()},
+                {k: jnp.asarray(v) for k, v in aux.items()}))
+        if not bool(done):
+            raise RuntimeError(
+                f"closed-loop sweep did not converge in {max_rounds} "
+                "rounds; raise max_rounds")
+        comp_pt, t0_pt, off = [], [], 0
+        for b in built:
+            comp_pt.append(comp[off:off + b["n"]])
+            t0_pt.append(t0f[off:off + b["n"]])
+            off += b["n"]
+    else:
+        if devices > jax.local_device_count():
+            raise ValueError(
+                f"devices={devices} but only {jax.local_device_count()} "
+                "jax devices visible (on CPU set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N before "
+                "importing jax)")
+        D = min(devices, len(points))
+        dev_pts = [[pi for pi in range(len(points)) if pi % D == d]
+                   for d in range(D)]
+        blks = [_closed_assemble([built[pi] for pi in idxs])
+                for idxs in dev_pts]
+        n_max = max(b["n"] for b in blks)
+        R_max = max(len(b["rows"]) for b in blks)
+        Ls_max = max(max(len(m) for m in b["rows"]) for b in blks)
+        padded = [_closed_pad(b, n_max, R_max, Ls_max) for b in blks]
+        flat_s = {k: np.stack([f[k] for f, _ in padded])
+                  for k in padded[0][0]}
+        aux_s = {k: np.stack([a[k] for _, a in padded])
+                 for k in padded[0][1]}
+        with enable_x64():
+            flat_j = {k: jnp.asarray(v) for k, v in flat_s.items()}
+            aux_j = {k: jnp.asarray(v) for k, v in aux_s.items()}
+            sh = (*args, R_max, Ls_max)
+            if shard_map is None:
+                out = _closed_exe(*sh, D, "pmap")(flat_j, aux_j)
+            else:
+                try:
+                    out = _closed_exe(*sh, D, "shard")(flat_j, aux_j)
+                except Exception:  # pragma: no cover - jax-version paths
+                    out = _closed_exe(*sh, D, "pmap")(flat_j, aux_j)
+            comp_s, t0_s, done_s, _ = jax.device_get(out)
+        if not bool(np.all(done_s)):
+            raise RuntimeError(
+                f"closed-loop sweep did not converge in {max_rounds} "
+                "rounds; raise max_rounds")
+        comp_pt = [np.empty(0)] * len(points)
+        t0_pt = [np.empty(0)] * len(points)
+        for d, idxs in enumerate(dev_pts):
+            off = 0
+            for pi in idxs:
+                n = built[pi]["n"]
+                comp_pt[pi] = comp_s[d, off:off + n]
+                t0_pt[pi] = t0_s[d, off:off + n]
+                off += n
+
+    # ---- fold into per-point RecordArray-style aggregates ----
+    N = len(points)
+    names = ("mean_latency", "read_latency", "update_latency",
+             "local_latency", "global_latency", "update_global_latency")
+    cols: Dict[str, np.ndarray] = {
+        "ops": np.asarray([b["n"] for b in built], np.int64)}
+    for name in names:
+        cols[name] = np.zeros(N)
+    cols["throughput"] = np.zeros(N)
+    cols["mean_hops"] = np.zeros(N)
+    tails = np.zeros((len(qs), N))
+    for pi, (p, b) in enumerate(zip(points, built)):
+        lat = np.asarray(comp_pt[pi]) - np.asarray(t0_pt[pi])
+        is_w, glob = b["is_w"], b["glob"]
+
+        def mean(m):
+            return float(lat[m].mean()) if m.any() else float("nan")
+
+        cols["mean_latency"][pi] = float(lat.mean())
+        cols["read_latency"][pi] = mean(~is_w)
+        cols["update_latency"][pi] = mean(is_w)
+        cols["local_latency"][pi] = mean(~glob)
+        cols["global_latency"][pi] = mean(glob)
+        cols["update_global_latency"][pi] = mean(is_w & glob)
+        cols["mean_hops"][pi] = float(b["hops"].mean())
+        # paper-metric throughput: mean of per-client-group rates, spans
+        # from the same t_start/latency expressions RecordArray
+        # group_stats folds
+        ends = np.asarray(t0_pt[pi]) + lat
+        rates = []
+        for gi in range(p.groups):
+            m = b["client"] == gi
+            if not m.any():
+                continue
+            span = ends[m].max() - np.asarray(t0_pt[pi])[m].min()
+            if span > 0:
+                rates.append(int(m.sum()) / span)
+        cols["throughput"][pi] = (sum(rates) / len(rates) if rates
+                                  else 0.0)
+        if qs:
+            tails[:, pi] = np.percentile(lat, qs)
     for q, t in zip(qs, tails):
         cols[f"p{q:g}_latency"] = t
     return SweepResult(points, cols, time.perf_counter() - t_wall)  # lint: ignore[EDK004] -- walltime reporting

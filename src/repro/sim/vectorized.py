@@ -262,25 +262,17 @@ class _FastEngine:
     # ----------------------------------------------------------- planning
     def load_plan(self, plan: List[ThreadPlan]) -> None:
         sim = self.sim
-        counts = [len(tp.key_idx) for tp in plan]
-        bounds = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        cols = plan_columns(plan, sim.records.group_code)
+        counts = cols["counts"]
+        bounds = cols["bounds"]
         self.n_ops = n_ops = int(bounds[-1])
         self.thread_end = bounds[1:].tolist()
         self.cursor = bounds[:-1].tolist()
-
-        def concat(field, dt):
-            if not plan:
-                return np.empty(0, dt)
-            return np.concatenate([getattr(tp, field) for tp in plan])
-
-        code = sim.records.group_code
-        self.client_code = np.concatenate(
-            [np.full(c, code(tp.gid), dtype=np.int32)
-             for c, tp in zip(counts, plan)]) if plan else np.empty(0, np.int32)
-        self.key_idx = concat("key_idx", np.int64)
-        self.kind = concat("kind", np.uint8)
-        self.dtype = concat("dtype", np.uint8)
-        self.fwd = concat("fwd", bool)
+        self.client_code = cols["client"]
+        self.key_idx = cols["key_idx"]
+        self.kind = cols["kind"]
+        self.dtype = cols["dtype"]
+        self.fwd = cols["fwd"]
         self.is_w = (self.kind != READ_CODE)
 
         # aux processes (churn drivers) registered via env.process before
@@ -679,6 +671,35 @@ class _FastEngine:
             self.kind[order], self.dtype[order],
             self.client_code[order],
             np.asarray(self.hops, dtype=np.int32)[order])
+
+
+def plan_columns(plan: List[ThreadPlan], code_of_gid) -> dict:
+    """Flat SoA schedule columns for a closed-loop plan, in (thread, op)
+    order — the order that defines the heap engine's pid tie-breaks.
+
+    Shared schedule extraction: the heap engine's :meth:`_FastEngine.
+    load_plan` and the closed-loop sweep path (:mod:`repro.sim.sweep`)
+    both flatten plans through here, so a schedule-layout change cannot
+    make the two engines drift.  ``code_of_gid`` maps a group id to its
+    integer client code (``RecordArray.group_code`` for a live sim, the
+    spawn index for the standalone sweep topology).
+    """
+    counts = [len(tp.key_idx) for tp in plan]
+    bounds = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+
+    def concat(field, dt):
+        if not plan:
+            return np.empty(0, dt)
+        return np.concatenate([getattr(tp, field) for tp in plan])
+
+    client = (np.concatenate([np.full(c, code_of_gid(tp.gid), np.int32)
+                              for c, tp in zip(counts, plan)])
+              if plan else np.empty(0, np.int32))
+    return dict(counts=counts, bounds=bounds, client=client,
+                key_idx=concat("key_idx", np.int64),
+                kind=concat("kind", np.uint8),
+                dtype=concat("dtype", np.uint8),
+                fwd=concat("fwd", bool))
 
 
 def run_closed_loop_fast(sim: SimEdgeKV, plan: List[ThreadPlan]) -> None:

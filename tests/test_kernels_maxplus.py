@@ -144,6 +144,35 @@ def test_kernel_direct_multiple_of_chunk():
                                atol=1e-5)
 
 
+@pytest.mark.parametrize("block_rows", [2, 4, 8])
+@pytest.mark.parametrize("R,L", [(1, 64), (5, 96), (16, 37)])
+def test_pallas_batched_rows_matches_oracle(block_rows, R, L):
+    """The ``block_rows`` grid axis tiles rows; results must not depend
+    on the tile size, including when R is not a multiple of it."""
+    a, s = make((R, L), seed=R * 100 + L)
+    with enable_x64():
+        got = np.asarray(maxplus_depart(jnp.asarray(a), jnp.asarray(s),
+                                        backend="pallas", chunk=16,
+                                        block_rows=block_rows,
+                                        interpret=True))
+    np.testing.assert_allclose(got, numpy_oracle(a, s), rtol=1e-12,
+                               atol=1e-12)
+
+
+def test_pallas_block_rows_bitwise_vs_block_rows_one():
+    """Row tiling is pure batching: each row's scan is independent, so
+    block_rows must be bit-invisible, not just within tolerance."""
+    a, s = make((7, 48), seed=41)
+    with enable_x64():
+        one = np.asarray(maxplus_depart(jnp.asarray(a), jnp.asarray(s),
+                                        backend="pallas", chunk=16,
+                                        block_rows=1, interpret=True))
+        many = np.asarray(maxplus_depart(jnp.asarray(a), jnp.asarray(s),
+                                         backend="pallas", chunk=16,
+                                         block_rows=4, interpret=True))
+    assert np.array_equal(one, many)
+
+
 def test_monotone_departures_and_fifo_invariant():
     """Departures are nondecreasing in op order and each op departs no
     earlier than its own arrival + service."""
