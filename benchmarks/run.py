@@ -4,29 +4,40 @@ micro-benchmarks and the roofline summary.
 Prints ``name,value,derived`` CSV rows (value unit depends on the bench;
 latency rows are milliseconds, throughput rows ops/s) and mirrors every
 row into ``BENCH_sweep.json`` at the repo root so the perf trajectory is
-machine-readable across PRs."""
+machine-readable across PRs.
+
+``--check`` flips the harness into regression-gate mode: nothing is
+written back; instead every deterministic (virtual-time) row is compared
+against the committed BENCH_*.json baselines within a tolerance band and
+the process exits non-zero on any out-of-band metric (host-dependent
+rows — walltimes, speedups, microsecond timings, roofline — are reported
+but never gate).  The full report lands in ``BENCH_check_report.json``.
+"""
 from __future__ import annotations
 
 import json
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
+from repro.obs import walltime
+
 _ROWS: list = []
 _FAILOVER_ROWS: list = []
 _HANDOFF_ROWS: list = []
 _SCENARIO_ROWS: list = []
-_JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
-_FAILOVER_JSON_PATH = (Path(__file__).resolve().parent.parent
-                       / "BENCH_failover.json")
-_HANDOFF_JSON_PATH = (Path(__file__).resolve().parent.parent
-                      / "BENCH_handoff.json")
-_SCENARIOS_JSON_PATH = (Path(__file__).resolve().parent.parent
-                        / "BENCH_scenarios.json")
+_TRACE_ROWS: list = []
+_CHECK_MODE = False
+_ROOT = Path(__file__).resolve().parent.parent
+_JSON_PATH = _ROOT / "BENCH_sweep.json"
+_FAILOVER_JSON_PATH = _ROOT / "BENCH_failover.json"
+_HANDOFF_JSON_PATH = _ROOT / "BENCH_handoff.json"
+_SCENARIOS_JSON_PATH = _ROOT / "BENCH_scenarios.json"
+_TRACE_JSON_PATH = _ROOT / "BENCH_trace.json"
+_CHECK_REPORT_PATH = _ROOT / "BENCH_check_report.json"
 
 
 def _row(name, value, derived=""):
@@ -35,31 +46,46 @@ def _row(name, value, derived=""):
 
 
 def _write_json():
+    if _CHECK_MODE:
+        return
     _JSON_PATH.write_text(json.dumps(
         dict(rows=_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _write_failover_json():
+    if _CHECK_MODE:
+        return
     _FAILOVER_JSON_PATH.write_text(json.dumps(
         dict(rows=_FAILOVER_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _write_handoff_json():
+    if _CHECK_MODE:
+        return
     _HANDOFF_JSON_PATH.write_text(json.dumps(
         dict(rows=_HANDOFF_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _write_scenarios_json():
+    if _CHECK_MODE:
+        return
     _SCENARIOS_JSON_PATH.write_text(json.dumps(
         dict(rows=_SCENARIO_ROWS), indent=1, sort_keys=True) + "\n")
+
+
+def _write_trace_json():
+    if _CHECK_MODE:
+        return
+    _TRACE_JSON_PATH.write_text(json.dumps(
+        dict(rows=_TRACE_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _timed(name, fn):
     """Run one bench fn and emit a walltime_s row for it, so BENCH_*.json
     tracks the wall-clock trajectory of every fig runner."""
-    t0 = time.perf_counter()
+    t0 = walltime()
     fn()
-    _row(f"walltime_s.{name}", f"{time.perf_counter() - t0:.2f}")
+    _row(f"walltime_s.{name}", f"{walltime() - t0:.2f}")
 
 
 # ------------------------------------------------------ paper figures 5-13
@@ -118,19 +144,19 @@ def bench_sweep():
 
     grid = sweep_grid()
     duration = 2.0
-    t0 = time.perf_counter()
+    t0 = walltime()
     run_sweep(grid, duration=duration)   # cold: includes jit compile
-    t_cold = time.perf_counter() - t0
+    t_cold = walltime() - t0
 
     results = []
 
     def sweep_once():
-        t0 = time.perf_counter()
+        t0 = walltime()
         results.append(run_sweep(grid, duration=duration))
-        return time.perf_counter() - t0
+        return walltime() - t0
 
     def loop_once():
-        t0 = time.perf_counter()
+        t0 = walltime()
         for p in grid:
             sim = SimEdgeKV(setting="edge", seed=0,
                             group_sizes=(p.group_size,) * p.groups,
@@ -142,7 +168,7 @@ def bench_sweep():
                                   n_records=p.n_records))
             (sim.mean_latency(), sim.mean_latency(kind="update"),
              sim.throughput(), sim.tail_latency(95), sim.tail_latency(99))
-        return time.perf_counter() - t0
+        return walltime() - t0
 
     # warm the allocator, then interleave the two sides so host-load
     # drift hits both; best-of-N per side
@@ -183,17 +209,17 @@ def bench_closed_sweep():
     from repro.sim.sweep import closed_grid, run_sweep
 
     grid = closed_grid(threads=500, ops=1000)
-    t0 = time.perf_counter()
+    t0 = walltime()
     run_sweep(grid, loop="closed", seed=0)   # cold: includes jit compile
-    t_cold = time.perf_counter() - t0
+    t_cold = walltime() - t0
 
     def sweep_once():
-        t0 = time.perf_counter()
+        t0 = walltime()
         run_sweep(grid, loop="closed", seed=0)
-        return time.perf_counter() - t0
+        return walltime() - t0
 
     def loop_once():
-        t0 = time.perf_counter()
+        t0 = walltime()
         for p in grid:
             sim = SimEdgeKV(setting="edge", seed=0,
                             group_sizes=(p.group_size,) * p.groups,
@@ -206,7 +232,7 @@ def bench_closed_sweep():
                                     n_records=p.n_records))
             (sim.mean_latency(), sim.mean_latency(kind="update"),
              sim.throughput(), sim.tail_latency(95), sim.tail_latency(99))
-        return time.perf_counter() - t0
+        return walltime() - t0
 
     sweep_once()
     t_loop, t_sweep = [], []
@@ -219,16 +245,17 @@ def bench_closed_sweep():
          f"cold_s={t_cold:.2f}")
 
     child = (
-        "import json, time\n"
+        "import json\n"
+        "from repro.obs import walltime\n"
         "import jax\n"
         "from repro.sim.sweep import closed_grid, run_sweep\n"
         "grid = closed_grid(threads=500, ops=1000)\n"
         "d = min(%d, jax.local_device_count())\n"
         "run_sweep(grid, loop='closed', seed=0, devices=d)\n"
-        "t0 = time.perf_counter()\n"
+        "t0 = walltime()\n"
         "run_sweep(grid, loop='closed', seed=0, devices=d)\n"
         "print(json.dumps(dict(devices=d,"
-        " warm_s=time.perf_counter() - t0)))\n")
+        " warm_s=walltime() - t0)))\n")
     src = str(Path(__file__).resolve().parent.parent / "src")
     for d in (1, 2, 4, 8):
         env = dict(
@@ -355,6 +382,32 @@ def bench_fig_scenarios():
     _write_scenarios_json()
 
 
+def bench_fig_trace():
+    """Observability tentpole: per-stage span decomposition of the §7
+    local-vs-global latency gap, with the fast-vs-oracle span bit-exact
+    verdict riding along as a differential axis.  Full 8-stage rows land
+    in the committed BENCH_trace.json; a small committed sample trace
+    (benchmarks/sample_trace.json) is regenerated for the
+    ``python -m repro.obs`` CLI smoke test."""
+    from repro.sim.experiments import fig_trace
+    sample = Path(__file__).resolve().parent / "sample_trace.json"
+    for r in fig_trace(ops_per_client=1000):
+        s = f"{r['setting']}.{r['dtype']}"
+        top = sorted((r[f"stage_{st}_ms"], st) for st in
+                     ("request", "route", "lease", "ingress", "queue",
+                      "service", "replicate", "response"))[-3:][::-1]
+        _row(f"fig_trace.latency_ms.{s}",
+             f"{r['mean_latency_ms']:.2f}",
+             f"ops={r['ops']};bitexact={r['span_bitexact']};" +
+             ";".join(f"{st}={ms:.2f}ms" for ms, st in top))
+        _TRACE_ROWS.append({k: (round(v, 6) if isinstance(v, float)
+                                else v) for k, v in r.items()})
+    if not _CHECK_MODE:
+        fig_trace(ops_per_client=120, threads=8, differential=False,
+                  trace_path=str(sample))
+    _write_trace_json()
+
+
 def bench_fig_scale():
     """100 groups x 100 threads = 10k clients — unlocked by the vectorized
     engine (fig-scale emulation in benchmark-tractable wall clock)."""
@@ -400,10 +453,10 @@ def bench_engine_speedup():
     def run(engine):
         sim = SimEdgeKV(setting="edge", seed=0, group_sizes=(3,) * 10,
                         engine=engine)
-        t0 = time.perf_counter()
+        t0 = walltime()
         sim.run_closed_loop(threads_per_client=100, ops_per_client=2000,
                             workload_kw=dict(p_global=0.5, n_records=5000))
-        return time.perf_counter() - t0
+        return walltime() - t0
 
     t_fast = min(run("fast") for _ in range(2))
     t_oracle = run("oracle")
@@ -427,23 +480,23 @@ def bench_core_protocol():
     ring = ChordRing(virtual_nodes=8)
     for i in range(64):
         ring.add_node(f"gw{i}")
-    t0 = time.perf_counter()
+    t0 = walltime()
     n = 20000
     for i in range(n):
         ring.locate(f"key-{i}")
-    us = (time.perf_counter() - t0) / n * 1e6
+    us = (walltime() - t0) / n * 1e6
     _row("core.ring_locate_us", f"{us:.2f}", "64 gateways x 8 vnodes")
-    t0 = time.perf_counter()
+    t0 = walltime()
     hops = [len(ring.route("gw0", f"key-{i}")) - 1 for i in range(2000)]
-    us = (time.perf_counter() - t0) / 2000 * 1e6
+    us = (walltime() - t0) / 2000 * 1e6
     _row("core.ring_route_us", f"{us:.2f}",
          f"mean_hops={np.mean(hops):.2f}")
     c = LocalCluster(["a", "b", "c"])
     c.run_until_leader()
-    t0 = time.perf_counter()
+    t0 = walltime()
     for i in range(300):
         c.propose(("put", "local", f"k{i}", i))
-    us = (time.perf_counter() - t0) / 300 * 1e6
+    us = (walltime() - t0) / 300 * 1e6
     _row("core.raft_commit_us", f"{us:.2f}", "3-node quorum, virtual time")
 
 
@@ -458,10 +511,10 @@ def bench_kernels():
     def timeit(fn, *args, n=5, **kw):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
-        t0 = time.perf_counter()
+        t0 = walltime()
         for _ in range(n):
             jax.block_until_ready(fn(*args, **kw))
-        return (time.perf_counter() - t0) / n * 1e6
+        return (walltime() - t0) / n * 1e6
 
     B, S, H, K, hd = 1, 1024, 8, 2, 64
     q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
@@ -550,12 +603,12 @@ def bench_edgecache():
         ring.add_node(f"g{g}")
     mgr = PagePoolManager("g0", 4096, 16, ring)
     prefix = np.arange(256, dtype=np.int32)   # 16 shared pages
-    t0 = time.perf_counter()
+    t0 = walltime()
     n = 200
     for i in range(n):
         mgr.register_global(f"seq{i}", prefix)
         mgr.alloc_local(f"seq{i}", 4)
-    us = (time.perf_counter() - t0) / n * 1e6
+    us = (walltime() - t0) / n * 1e6
     _row("edgecache.admit_us", f"{us:.1f}",
          f"dedup_hits={mgr.stats['dedup_hits']};"
          f"slots={mgr.used_slots}/4096")
@@ -580,7 +633,81 @@ def bench_roofline():
              f"bottleneck={r['bottleneck']};frac={r['roofline_frac']:.2f}")
 
 
-def main() -> None:
+# Substrings marking host-dependent rows: mirrored into the check report
+# for eyeballing, but never allowed to fail the regression gate (they
+# measure this machine, not the simulation).
+_UNGATED = ("walltime", "speedup", "_us", "per_device_scaling",
+            "roofline", "kernel.", "compile")
+
+
+def _gated(name: str) -> bool:
+    return not any(tag in name for tag in _UNGATED)
+
+
+def _num(v):
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return None
+    return f if np.isfinite(f) else None
+
+
+def run_check(tolerance: float) -> int:
+    """Compare this run's rows against the committed BENCH_sweep.json
+    within a relative tolerance band.  Virtual-time metrics are
+    deterministic, so the band exists only to absorb intentional
+    re-baselines mid-review; any gated row drifting outside it — or a
+    baseline row that vanished — fails the gate (exit 1)."""
+    if not _JSON_PATH.exists():
+        print(f"--check: no baseline at {_JSON_PATH}", file=sys.stderr)
+        return 2
+    baseline = {r["name"]: r["value"]
+                for r in json.loads(_JSON_PATH.read_text())["rows"]}
+    current = {r["name"]: r["value"] for r in _ROWS}
+    report, counts = [], {}
+    for name in sorted(set(baseline) | set(current)):
+        b, c = _num(baseline.get(name)), _num(current.get(name))
+        if name not in current:
+            status = "missing"
+        elif name not in baseline:
+            status = "new"
+        elif not _gated(name):
+            status = "ungated"
+        elif b is None or c is None:
+            status = "skipped"
+        elif abs(c - b) <= max(tolerance * abs(b), 1e-6):
+            status = "ok"
+        else:
+            status = "fail"
+        counts[status] = counts.get(status, 0) + 1
+        entry = dict(name=name, baseline=baseline.get(name),
+                     current=current.get(name), status=status)
+        if b is not None and c is not None:
+            entry["rel_err"] = round(abs(c - b) / max(abs(b), 1e-12), 6)
+        report.append(entry)
+    _CHECK_REPORT_PATH.write_text(json.dumps(
+        dict(tolerance=tolerance, counts=counts, rows=report),
+        indent=1, sort_keys=True) + "\n")
+    bad = [e for e in report if e["status"] in ("fail", "missing")]
+    print(f"--check: {counts} -> {_CHECK_REPORT_PATH.name}")
+    for e in bad:
+        print(f"  {e['status'].upper()}: {e['name']} "
+              f"baseline={e['baseline']} current={e.get('current')}")
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    global _CHECK_MODE
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="regression-gate mode: compare against the "
+                         "committed BENCH_*.json instead of rewriting it")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative tolerance band for --check "
+                         "(default 0.05)")
+    args = ap.parse_args(argv)
+    _CHECK_MODE = args.check
     print("name,value,derived")
     bench_core_protocol()
     bench_kernels()
@@ -594,6 +721,7 @@ def main() -> None:
     _timed("fig_failover", bench_fig_failover)
     _timed("fig_handoff", bench_fig_handoff)
     _timed("fig_scenarios", bench_fig_scenarios)
+    _timed("fig_trace", bench_fig_trace)
     _timed("fig_scale", bench_fig_scale)
     _timed("fig_scale_1m", bench_fig_scale_1m)
     _timed("headline_claims", bench_headline_claims)
@@ -604,7 +732,10 @@ def main() -> None:
     _timed("fig13", bench_fig13_rate)
     bench_roofline()
     _write_json()
+    if args.check:
+        return run_check(args.tolerance)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

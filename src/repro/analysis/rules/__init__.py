@@ -1,6 +1,6 @@
 """Rule plugins — importing this package registers every rule family."""
 from __future__ import annotations
 
-from . import determinism, jitpurity, protocol  # noqa: F401
+from . import determinism, jitpurity, obs, protocol  # noqa: F401
 
-__all__ = ["determinism", "jitpurity", "protocol"]
+__all__ = ["determinism", "jitpurity", "obs", "protocol"]

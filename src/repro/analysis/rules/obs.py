@@ -1,0 +1,60 @@
+"""EDK3xx — observability rules.
+
+Timing must flow through one instrumented seam.  PR 9 introduced
+``repro.obs`` as the sole owner of the wall clock: every walltime row in
+BENCH_*.json, every ``walltime_s`` column in a figure dict, and every
+compile-timing probe goes through :func:`repro.obs.walltime` /
+:func:`repro.obs.timed`, so the regression gate can trust that "time"
+means the same thing everywhere (and tests can assert the sim layer
+never reads it at all).
+
+* **EDK301** — raw wall-clock read (``time.time``, ``perf_counter``,
+  ``datetime.now``, ...) anywhere in ``repro`` outside ``repro/obs``;
+  call :func:`repro.obs.walltime` (or wrap with
+  :func:`repro.obs.timed`) instead.  Unlike EDK004 — which bans the
+  wall clock from the *virtual-time* modules outright — this rule is
+  about routing legitimate host timing through the one blessed seam,
+  so there is no suppression idiom: if the read is legitimate,
+  ``walltime()`` is a drop-in replacement.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List
+
+from ..astutil import call_name
+from ..engine import FIXTURE_MARKER, FileContext, Finding, Rule, register
+from .determinism import _WALL_CLOCKS
+
+
+@register
+class RawWallClockOutsideObs(Rule):
+    id = "EDK301"
+    severity = "error"
+    summary = ("raw wall-clock read outside repro.obs; route host timing "
+               "through repro.obs.walltime() / timed()")
+    scopes = None  # everywhere in repro *except* the obs package itself
+
+    def in_scope(self, path: Path) -> bool:
+        posix = path.as_posix()
+        if FIXTURE_MARKER in posix:
+            return True
+        return "repro/obs" not in posix
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in _WALL_CLOCKS:
+                out.append(ctx.finding(
+                    self, node,
+                    f"{name}() reads the wall clock directly; "
+                    "repro.obs.walltime() is the one instrumented clock "
+                    "seam (repro.obs.timed() for whole-block timing)"))
+        return out
+
+
+__all__ = ["RawWallClockOutsideObs"]

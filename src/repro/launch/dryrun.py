@@ -22,7 +22,6 @@ bytes, group size, loop-body trip multiplier) for §Roofline.
 import argparse
 import json
 import re
-import time
 import traceback
 from pathlib import Path
 
@@ -33,6 +32,8 @@ from repro.configs import ALL_ARCHS, SHAPES, get_config, supports_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import cell_specs
 from repro.distributed.sharding import axis_size
+
+from repro.obs import walltime
 
 COLLECTIVE_RE = re.compile(
     r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\].*?\s"
@@ -145,7 +146,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         print(f"[SKIP] {cell_id}: {why}")
         return rec
 
-    t0 = time.time()
+    t0 = walltime()
     try:
         plan = cell_specs(cfg, shape, mesh, overrides)
         from repro.distributed.sharding import to_shardings
@@ -157,9 +158,9 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                              out_shardings=out_sh,
                              donate_argnums=plan.donate)
             lowered = jitted.lower(*plan.args)
-            t_lower = time.time() - t0
+            t_lower = walltime() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = walltime() - t0 - t_lower
         cost = dict(compiled.cost_analysis() or {})
         try:
             mem = compiled.memory_analysis()
@@ -201,7 +202,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         rec = {"cell": cell_id, "status": "error",
                "error": f"{type(e).__name__}: {e}",
                "trace": traceback.format_exc()[-2000:],
-               "elapsed_s": round(time.time() - t0, 1)}
+               "elapsed_s": round(walltime() - t0, 1)}
         out_path.write_text(json.dumps(rec, indent=1))
         print(f"[FAIL] {cell_id}: {type(e).__name__}: {str(e)[:200]}")
         return rec

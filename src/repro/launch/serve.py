@@ -9,7 +9,8 @@ step. The page-pool stats printed at the end show the EdgeKV dedup win.
 from __future__ import annotations
 
 import argparse
-import time
+
+from repro.obs import walltime
 
 
 def main():
@@ -59,7 +60,7 @@ def main():
                    + args.gen_len + args.page_size - 1) // args.page_size
         pool.alloc_local(f"req{i}", n_local)
 
-    t0 = time.time()
+    t0 = walltime()
     max_len = args.prompt_len + args.gen_len
     logits, cache = prefill(params, cfg, jnp.asarray(prompts),
                             max_len=max_len, chunk=64)
@@ -72,7 +73,7 @@ def main():
             jnp.int32)
         generated.append(tok)
     out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    dt = time.time() - t0
+    dt = walltime() - t0
 
     print(f"served {B} requests x {args.gen_len} tokens "
           f"in {dt:.2f}s ({B*args.gen_len/dt:.1f} tok/s)")

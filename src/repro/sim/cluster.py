@@ -56,6 +56,8 @@ import numpy as np
 
 from repro.core.hashring import ChordRing
 from repro.core.kvstore import StorageModule, LOCAL, GLOBAL
+from repro.obs.trace import (B_END, B_INGRESS, B_LEASE, B_QUEUE, B_REPLICATE,
+                             B_REQUEST, B_ROUTE, B_SERVICE, fill_bounds)
 
 from .events import DeferredEnvironment, Environment, Resource, Timeout
 from .records import OpRecord, RecordArray
@@ -65,6 +67,7 @@ from .ycsb import (Op, YCSBWorkload, DTYPE_CODE, DTYPES, KIND_CODE, KINDS,
 
 ACK_BYTES = 64
 ERR_BYTES = REQ_BYTES  # refusal/error ack frame (header-only response)
+_NAN = float("nan")    # unsampled stage-boundary sentinel (tracing)
 
 
 def arrival_seed(sim_seed: int, gid: str) -> int:
@@ -154,10 +157,17 @@ class SimEdgeKV:
         gateway_cache: int = 0,
         engine: str = "oracle",
         successors: int = 4,
+        trace: bool = False,
     ):
         if engine not in ("oracle", "fast"):
             raise ValueError(f"unknown engine {engine!r}")
         self.engine = engine
+        # span tracing (repro.obs): when on, every record carries the 8
+        # absolute stage-end timestamps. The oracle samples env.now
+        # between its existing event yields (never adding events, so
+        # traced runs stay bit-identical); the fast engine reconstructs
+        # the same boundaries from its delay columns.
+        self.trace = trace
         # the fast engine drives auxiliary processes (e.g. churn_proc)
         # itself, so env.process must defer instead of scheduling
         self.env = DeferredEnvironment() if engine == "fast" else Environment()
@@ -173,7 +183,7 @@ class SimEdgeKV:
         self.group_of_gateway: Dict[str, str] = {}
         self._gateway_cache = gateway_cache
         self._next_gi = 0
-        self.records = RecordArray()
+        self.records = RecordArray(stages=trace)
         for n in group_sizes:
             self._spawn_group(n)
         self.client_spans: Dict[str, List[float]] = {}
@@ -783,12 +793,19 @@ class SimEdgeKV:
         g["page_cache"].put(key, True)
         return 0.0 if hit else self.service.seek_s
 
-    def _group_write(self, gid: str, op: Op, tier: str) -> Generator:
+    def _group_write(self, gid: str, op: Op, tier: str,
+                     tb: Optional[List[float]] = None) -> Generator:
         g = self.groups[gid]
         yield g["leader"].acquire()
+        if tb is not None:
+            tb[B_QUEUE] = self.env.now          # queue wait ends here
         yield Timeout(self.service.commit_s + self._page_penalty(g, op.key))
+        if tb is not None:
+            tb[B_SERVICE] = self.env.now
         g["leader"].release()
         yield Timeout(self._quorum_rtt(g["n"], op.value_bytes + ACK_BYTES))
+        if tb is not None:
+            tb[B_REPLICATE] = self.env.now
         if tier == GLOBAL and self.churn_events:
             # a churn event (join OR drain) may have re-homed the key while
             # this op was in flight: the write follows the handoff to the
@@ -804,22 +821,38 @@ class SimEdgeKV:
                 self.unavailable.pop(op.key, None)
         g["state"].apply(("put", tier, op.key, ("v", op.value_bytes)))
 
-    def _group_read(self, gid: str, op: Op, tier: str) -> Generator:
+    def _group_read(self, gid: str, op: Op, tier: str,
+                    tb: Optional[List[float]] = None) -> Generator:
         g = self.groups[gid]
         yield g["leader"].acquire()
+        if tb is not None:
+            tb[B_QUEUE] = self.env.now          # queue wait ends here
         yield Timeout(self.service.read_s + self._page_penalty(g, op.key))
+        if tb is not None:
+            tb[B_SERVICE] = self.env.now
         g["leader"].release()
         # ReadIndex heartbeat round (no disk append at followers)
         need = (g["n"] // 2 + 1) - 1
         if need > 0:
             yield Timeout(2 * self.net.xfer("st_st", ACK_BYTES))
+        if tb is not None:
+            tb[B_REPLICATE] = self.env.now
         if tier == GLOBAL and self.unavailable and op.key in self.unavailable:
             self.lost_ops += 1  # owner crashed, mirror not yet promoted
         g["state"].get(tier, op.key)
 
     # ------------------------------------------------------------ client op
+    def _bounds(self, t0: float, tb: List[float]) -> List[float]:
+        """Close a boundary list at op completion (records the end stamp
+        and fills stages the op never entered)."""
+        tb[B_END] = self.env.now
+        return fill_bounds(t0, tb)
+
     def client_op(self, client_gid: str, op: Op) -> Generator:
         t0 = self.env.now
+        # tracing samples env.now BETWEEN the existing yields — it never
+        # adds or removes events, so traced runs replay bit-identically
+        tb: Optional[List[float]] = [_NAN] * 8 if self.trace else None
         is_write = op.kind in ("update", "insert")
         req = REQ_BYTES + (op.value_bytes if is_write else 0)
         resp = REQ_BYTES + (0 if is_write else op.value_bytes)
@@ -838,6 +871,8 @@ class SimEdgeKV:
                 fwd = self.rng.random() < (n - 1) / n
             if fwd:
                 yield Timeout(self.net.xfer("st_st", req))
+            if tb is not None:
+                tb[B_REQUEST] = self.env.now
             if self.partition_straddle and \
                     self._group_side(client_gid) is None:
                 # straddled client group with no replica majority on
@@ -850,18 +885,22 @@ class SimEdgeKV:
                 self.records.append(t0, self.env.now - t0,
                                     KIND_CODE[op.kind],
                                     DTYPE_CODE[op.dtype],
-                                    self.records.group_code(client_gid), 0)
+                                    self.records.group_code(client_gid), 0,
+                                    bounds=(self._bounds(t0, tb)
+                                            if tb is not None else None))
                 return
             if is_write:
-                yield from self._group_write(client_gid, op, LOCAL)
+                yield from self._group_write(client_gid, op, LOCAL, tb)
             else:
-                yield from self._group_read(client_gid, op, LOCAL)
+                yield from self._group_read(client_gid, op, LOCAL, tb)
             if fwd:
                 yield Timeout(self.net.xfer("st_st", resp))
         else:
             # global: edge node -> local gateway -> Chord -> owner group
             gw = self.gateway_of_group[client_gid]
             yield Timeout(self.net.xfer("st_gw", req))
+            if tb is not None:
+                tb[B_REQUEST] = self.env.now
             if self.partition_of:
                 code = self._refusal_code(client_gid, op.key, is_write)
                 if code:
@@ -875,7 +914,9 @@ class SimEdgeKV:
                     self.records.append(
                         t0, self.env.now - t0, KIND_CODE[op.kind],
                         DTYPE_CODE[op.dtype],
-                        self.records.group_code(client_gid), 0)
+                        self.records.group_code(client_gid), 0,
+                        bounds=(self._bounds(t0, tb)
+                                if tb is not None else None))
                     return
             cached_owner = (self.gw_cache[gw].get(op.key)
                             if self.gw_cache else None)
@@ -897,6 +938,8 @@ class SimEdgeKV:
                 # the invalidation already ran and this owner may be stale
                 if self.gw_cache and epoch == self.churn_epoch:
                     self.gw_cache[gw].put(op.key, owner_gw)
+            if tb is not None:
+                tb[B_ROUTE] = self.env.now
             owner_gid = self.group_of_gateway[owner_gw]
             if self.leases:
                 lease = self.leases.get(op.key)
@@ -933,11 +976,15 @@ class SimEdgeKV:
                         self.unavailable.pop(op.key, None)
                         yield Timeout(self.net.xfer(
                             "gw_gw", RECORD_BYTES + REQ_BYTES))
+            if tb is not None:
+                tb[B_LEASE] = self.env.now
             yield Timeout(self.net.xfer("st_gw", req))  # gw -> group leader
+            if tb is not None:
+                tb[B_INGRESS] = self.env.now
             if is_write:
-                yield from self._group_write(owner_gid, op, GLOBAL)
+                yield from self._group_write(owner_gid, op, GLOBAL, tb)
             else:
-                yield from self._group_read(owner_gid, op, GLOBAL)
+                yield from self._group_read(owner_gid, op, GLOBAL, tb)
             yield Timeout(self.net.xfer("st_gw", resp))  # leader -> owner gw
             if owner_gw != gw:
                 yield Timeout(self.net.xfer("gw_gw", resp))  # direct return
@@ -946,7 +993,9 @@ class SimEdgeKV:
         yield Timeout(self.net.xfer("cli_st", resp))
         self.records.append(t0, self.env.now - t0, KIND_CODE[op.kind],
                             DTYPE_CODE[op.dtype],
-                            self.records.group_code(client_gid), hops)
+                            self.records.group_code(client_gid), hops,
+                            bounds=(self._bounds(t0, tb)
+                                    if tb is not None else None))
 
     # -------------------------------------------------------- load drivers
     def _closed_loop_plan(self, threads_per_client: int, ops_per_client: int,
@@ -1103,3 +1152,42 @@ class SimEdgeKV:
             if span > 0:
                 per_client.append(count / span)
         return sum(per_client) / len(per_client) if per_client else 0.0
+
+    def metrics(self) -> Dict[str, Any]:
+        """Flat dotted-name metrics snapshot (the ``repro.obs`` registry
+        view of the ad-hoc counters: refusal accounting, lease outcomes,
+        cache hit/miss, fault bookkeeping).  Built on demand from the
+        live structures, so the simulation hot path pays nothing."""
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        for k, v in self.refusals.items():
+            reg.counter(f"sim.refusals.{k}").inc(v)
+        for k, v in self.handoff_stats.items():
+            reg.counter(f"sim.handoff.{k}").inc(v)
+        reg.gauge("sim.handoff.pending").set(len(self.leases))
+        reg.counter("sim.lost_ops").inc(self.lost_ops)
+        reg.counter("sim.churn.events").inc(len(self.churn_events))
+        reg.gauge("sim.churn.epoch").set(self.churn_epoch)
+        reg.gauge("sim.unavailable_keys").set(len(self.unavailable))
+        if self.gw_cache:
+            reg.counter("sim.cache.gateway.hits").inc(
+                sum(c.hits for c in self.gw_cache.values()))
+            reg.counter("sim.cache.gateway.misses").inc(
+                sum(c.misses for c in self.gw_cache.values()))
+        reg.counter("sim.cache.page.hits").inc(
+            sum(g["page_cache"].hits for g in self.groups.values()))
+        reg.counter("sim.cache.page.misses").inc(
+            sum(g["page_cache"].misses for g in self.groups.values()))
+        reg.counter("sim.records.count").inc(len(self.records))
+        if len(self.records):
+            reg.gauge("sim.latency.mean").set(self.mean_latency())
+            reg.gauge("sim.latency.p95").set(self.tail_latency(95))
+            reg.gauge("sim.latency.p99").set(self.tail_latency(99))
+        return reg.snapshot()
+
+    def trace_set(self, meta: Optional[dict] = None):
+        """The run's spans as a :class:`repro.obs.TraceSet` (requires
+        ``trace=True``), with the metrics snapshot attached."""
+        from repro.obs import TraceSet
+        return TraceSet.from_records(self.records, meta=meta,
+                                     metrics=self.metrics())

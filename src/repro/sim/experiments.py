@@ -12,11 +12,12 @@ statistically.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import walltime
 
 from .cluster import ServiceParams, SimEdgeKV
 
@@ -208,7 +209,7 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
             sim.env.process(sim.churn_proc(t_start=0.05, period=0.1,
                                            adds=adds,
                                            async_handoff=async_handoff))
-        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        t0 = walltime()
         sim.run_closed_loop(
             threads_per_client=clients_per_group,
             ops_per_client=ops_per_client,
@@ -230,7 +231,7 @@ def fig_churn(base_groups: int = 10, clients_per_group: int = 100,
             leases_redirected=st["redirects"],
             leases_superseded=st["superseded"],
             leases_pending=len(sim.leases),
-            walltime_s=time.perf_counter() - t0,  # lint: ignore[EDK004] -- walltime reporting
+            walltime_s=walltime() - t0,
         ))
     return rows
 
@@ -266,13 +267,13 @@ def fig_handoff(base_groups: int = 10, clients_per_group: int = 100,
             t_start=0.05, period=0.1, adds=adds,
             async_handoff=(scenario == "async"), lease_batch=8,
             lease_period=0.02))
-        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        t0 = walltime()
         sim.run_closed_loop(
             threads_per_client=clients_per_group,
             ops_per_client=ops_per_client,
             workload_kw=dict(p_global=p_global, n_records=2000,
                              distribution="zipfian"))
-        wall = time.perf_counter() - t0  # lint: ignore[EDK004] -- walltime reporting
+        wall = walltime() - t0
         st = sim.handoff_stats
         rows.append(dict(
             scenario=scenario, engine=engine,
@@ -333,13 +334,13 @@ def fig_failover(base_groups: int = 10, clients_per_group: int = 100,
         if scenario == "failover":
             sim.env.process(sim.fault_proc(victims=tuple(victims),
                                            t_crash=0.05))
-        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        t0 = walltime()
         sim.run_closed_loop(
             threads_per_client=clients_per_group,
             ops_per_client=ops_per_client,
             workload_kw=dict(p_global=p_global, n_records=5000),
             client_groups=base)
-        wall = time.perf_counter() - t0  # lint: ignore[EDK004] -- walltime reporting
+        wall = walltime() - t0
         crash_t = {g: t for t, ev, g, _ in sim.churn_events
                    if ev == "crash"}
         rec_t = {g: t for t, ev, g, _ in sim.churn_events
@@ -413,12 +414,12 @@ def fig_scale(groups: int = 100, clients_per_group: int = 100,
         )]
     sim = SimEdgeKV(setting="edge", group_sizes=(3,) * groups,
                     service=service, seed=seed, engine=engine)
-    t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    t0 = walltime()
     sim.run_closed_loop(
         threads_per_client=clients_per_group,
         ops_per_client=ops_per_client,
         workload_kw=dict(p_global=p_global))
-    wall = time.perf_counter() - t0  # lint: ignore[EDK004] -- walltime reporting
+    wall = walltime() - t0
     return [dict(
         engine=engine, groups=groups,
         clients=groups * clients_per_group,
@@ -438,29 +439,34 @@ def fig_scale(groups: int = 100, clients_per_group: int = 100,
 # ----------------------------------------------------------- fig scenarios
 def _scenario_row(name: str, sim: SimEdgeKV, wall: float,
                   window: Optional[Tuple[float, float]] = None) -> dict:
-    """Common metric block for one scenario run: latency/throughput,
-    refusal breakdown, unavailability windows (partition cut->heal and
-    crash->recover), lost ops, and — when a surge ``window`` is given —
-    the p95/p99 over ops arriving inside it."""
+    """Common metric block for one scenario run, consumed from the
+    unified ``sim.metrics()`` registry snapshot (dotted names — the same
+    view the ``python -m repro.obs`` CLI and trace files carry):
+    latency/throughput, refusal breakdown, unavailability windows
+    (partition cut->heal and crash->recover), lost ops, and — when a
+    surge ``window`` is given — the p95/p99 over ops arriving inside
+    it."""
     cut_t = [t for t, ev in sim.partition_events if ev == "cut"]
     heal_t = [t for t, ev in sim.partition_events if ev == "heal"]
     pwin = [h - c for c, h in zip(cut_t, heal_t)]
     crash_t = {g: t for t, ev, g, _ in sim.churn_events if ev == "crash"}
     rec_t = {g: t for t, ev, g, _ in sim.churn_events if ev == "recover"}
     fwin = [rec_t[g] - crash_t[g] for g in crash_t if g in rec_t]
+    m = sim.metrics()
     row = dict(
-        scenario=name, engine=sim.engine, ops=len(sim.records),
-        mean_latency_ms=1e3 * sim.mean_latency(),
-        p95_latency_ms=1e3 * sim.tail_latency(95),
-        p99_latency_ms=1e3 * sim.tail_latency(99),
+        scenario=name, engine=sim.engine,
+        ops=int(m["sim.records.count"]),
+        mean_latency_ms=1e3 * float(m.get("sim.latency.mean", 0.0)),
+        p95_latency_ms=1e3 * float(m.get("sim.latency.p95", 0.0)),
+        p99_latency_ms=1e3 * float(m.get("sim.latency.p99", 0.0)),
         throughput_ops=sim.throughput(),
-        refused_writes=sim.refusals["writes"],
-        refused_reads=sim.refusals["reads"],
-        refused_cross_cut=sim.refusals["cross_cut"],
-        refused_no_quorum=sim.refusals["no_quorum"],
-        refused_minority_side=sim.refusals["minority_side"],
-        refused_majority_side=sim.refusals["majority_side"],
-        lost_ops=sim.lost_ops,
+        refused_writes=int(m["sim.refusals.writes"]),
+        refused_reads=int(m["sim.refusals.reads"]),
+        refused_cross_cut=int(m["sim.refusals.cross_cut"]),
+        refused_no_quorum=int(m["sim.refusals.no_quorum"]),
+        refused_minority_side=int(m["sim.refusals.minority_side"]),
+        refused_majority_side=int(m["sim.refusals.majority_side"]),
+        lost_ops=int(m["sim.lost_ops"]),
         partition_unavailability_ms=1e3 * max(pwin) if pwin else 0.0,
         failure_unavailability_ms=1e3 * max(fwin) if fwin else 0.0,
         keys_rejoined=sum(n for _, ev, _, n in sim.churn_events
@@ -526,12 +532,12 @@ def fig_scenarios(base_groups: int = 9, clients_per_group: int = 100,
         sim = SimEdgeKV(setting="edge", group_sizes=(3,) * base_groups,
                         service=service, seed=seed, engine=engine)
         sc.install(sim)
-        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        t0 = walltime()
         sim.run_closed_loop(
             threads_per_client=clients_per_group,
             ops_per_client=ops_per_client,
             workload_kw=dict(p_global=p_global, n_records=5000))
-        rows.append(_scenario_row(name, sim, time.perf_counter() - t0))  # lint: ignore[EDK004] -- walltime reporting
+        rows.append(_scenario_row(name, sim, walltime() - t0))
 
     # regional failure: victims join client-free (fig_failover pattern),
     # crash together, recover, then re-join under their old identities
@@ -542,14 +548,14 @@ def fig_scenarios(base_groups: int = 9, clients_per_group: int = 100,
     Scenario("regional_failure", events=(
         RegionalFailure(t_start=0.05, gids=victims, rejoin=True),
     )).install(sim)
-    t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    t0 = walltime()
     sim.run_closed_loop(
         threads_per_client=clients_per_group,
         ops_per_client=ops_per_client,
         workload_kw=dict(p_global=p_global, n_records=5000),
         client_groups=base)
     rows.append(_scenario_row("regional_failure", sim,
-                              time.perf_counter() - t0))  # lint: ignore[EDK004] -- walltime reporting
+                              walltime() - t0))
 
     surge = (0.25 * duration, 0.55 * duration)
     open_specs = dict(
@@ -567,14 +573,89 @@ def fig_scenarios(base_groups: int = 9, clients_per_group: int = 100,
                         service=service, seed=seed, engine=engine)
         sc.install(sim)
         profs = sc.profiles(sim, duration)
-        t0 = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+        t0 = walltime()
         sim.run_open_loop(
             rate_per_client=rate_per_client, duration=duration,
             workload_kw=dict(p_global=p_global, n_records=5000),
             rate_profiles=profs)
         rows.append(_scenario_row(
-            name, sim, time.perf_counter() - t0,  # lint: ignore[EDK004] -- walltime reporting
+            name, sim, walltime() - t0,
             window=surge if name == "flash_crowd" else None))
+    return rows
+
+
+# ------------------------------------------------------------- fig trace
+def fig_trace(ops_per_client: int = 2000, threads: int = 100,
+              p_global: float = 0.5,
+              service: Optional[ServiceParams] = None, seed: int = 0,
+              engine: str = "fast", differential: bool = True,
+              trace_path: Optional[str] = None) -> List[dict]:
+    """Per-stage latency decomposition (observability tentpole): where do
+    the §7 local-vs-global milliseconds actually go?
+
+    Runs the closed-loop YCSB scenario with ``trace=True`` on edge and
+    cloud and folds the :class:`repro.obs.TraceSet` spans into one row
+    per (setting, dtype): mean end-to-end latency plus the mean duration
+    and share of each of the eight span stages (request / route / lease /
+    ingress / queue / service / replicate / response).
+
+    With ``differential=True`` the same scenario is replayed on the
+    *other* engine and the spans are compared column by column — a
+    closed-loop no-churn run must agree **bit-exactly**, making span
+    decomposition a cross-engine differential axis, not just a report
+    (``span_bitexact`` lands in every row).
+
+    ``trace_path`` writes the edge trace (with the unified metrics
+    snapshot attached) as a ``repro.obs.trace/v1`` JSON file — the input
+    format of the ``python -m repro.obs`` CLI.
+    """
+    from repro.obs import BOUNDARY_FIELDS, STAGES
+
+    rows = []
+    for setting in ("edge", "cloud"):
+        t0 = walltime()
+        sim = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
+                        service=service, seed=seed, engine=engine,
+                        trace=True)
+        sim.run_closed_loop(
+            threads_per_client=threads, ops_per_client=ops_per_client,
+            workload_kw=dict(p_global=p_global))
+        wall = walltime() - t0
+        bitexact = None
+        if differential:
+            other = "oracle" if engine == "fast" else "fast"
+            ref = SimEdgeKV(setting=setting, group_sizes=(3, 3, 3),
+                            service=service, seed=seed, engine=other,
+                            trace=True)
+            ref.run_closed_loop(
+                threads_per_client=threads,
+                ops_per_client=ops_per_client,
+                workload_kw=dict(p_global=p_global))
+            a, b = sim.records.columns(), ref.records.columns()
+            bitexact = all(
+                np.array_equal(a[f], b[f])
+                for f in ("t_start", "latency") + BOUNDARY_FIELDS)
+        ts = sim.trace_set(meta=dict(
+            figure="fig_trace", setting=setting, engine=engine,
+            seed=seed, threads=threads, ops_per_client=ops_per_client,
+            p_global=p_global))
+        if trace_path is not None and setting == "edge":
+            ts.to_json(trace_path)
+        for dtype in (None, "local", "global"):
+            sel = ts.select(dtype=dtype)
+            if not sel.any():
+                continue
+            summary = ts.stage_summary(dtype=dtype)
+            row = dict(
+                setting=setting, dtype=dtype or "all", engine=engine,
+                ops=int(sel.sum()),
+                mean_latency_ms=1e3 * float(
+                    ts.columns["latency"][sel].mean()),
+                span_bitexact=bitexact, walltime_s=wall)
+            for s in STAGES:
+                row[f"stage_{s}_ms"] = 1e3 * summary[s]["mean"]
+                row[f"share_{s}"] = summary[s]["share"]
+            rows.append(row)
     return rows
 
 

@@ -12,13 +12,20 @@ cached column view concatenates segments on demand.
 
 Iteration (and ``[]``) still yields :class:`OpRecord` views so existing
 tests/examples that loop over ``sim.records`` keep working.
+
+With ``stages=True`` (``SimEdgeKV(trace=True)``) each record additionally
+carries the eight absolute stage-end timestamps of the
+:mod:`repro.obs.trace` span model — the raw material for
+:class:`repro.obs.TraceSet`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.obs.trace import BOUNDARY_FIELDS
 
 from .ycsb import DTYPES, KINDS
 
@@ -39,9 +46,14 @@ class OpRecord:
 class RecordArray:
     """Append-friendly SoA buffer of completed-operation records."""
 
-    def __init__(self) -> None:
+    def __init__(self, stages: bool = False) -> None:
+        self.stages = stages
+        self._fields: Tuple[str, ...] = _FIELDS + (
+            BOUNDARY_FIELDS if stages else ())
+        self._dtypes: Tuple[type, ...] = _DTYPES + (
+            (np.float64,) * len(BOUNDARY_FIELDS) if stages else ())
         self._chunks: List[dict] = []      # completed numpy segments
-        self._tail: Dict[str, list] = {f: [] for f in _FIELDS}
+        self._tail: Dict[str, list] = {f: [] for f in self._fields}
         self._len = 0
         self._group_ids: List[str] = []           # code -> gid
         self._group_code: Dict[str, int] = {}     # gid -> code
@@ -49,6 +61,16 @@ class RecordArray:
         self._stats: Optional[Dict[str, Tuple[int, float, float]]] = None
         # cached per-group tail latencies, keyed by the percentile tuple
         self._tails: Dict[Tuple[float, ...], Dict[str, Tuple[float, ...]]] = {}
+
+    def _invalidate(self) -> None:
+        """Drop every derived snapshot (column view, group stats, tails).
+
+        The single invalidation point for BOTH mutation paths — a new
+        mutator that forgets to call this would resurrect the
+        stale-``group_stats``-after-``extend_columns`` class of bug.
+        """
+        self._arrays = self._stats = None
+        self._tails = {}
 
     # ------------------------------------------------------------ groups
     def register_group(self, gid: str) -> int:
@@ -68,7 +90,8 @@ class RecordArray:
 
     # ------------------------------------------------------------ append
     def append(self, t_start: float, latency: float, kind: int, dtype: int,
-               group: int, hops: int) -> None:
+               group: int, hops: int,
+               bounds: Optional[Sequence[float]] = None) -> None:
         t = self._tail
         t["t_start"].append(t_start)
         t["latency"].append(latency)
@@ -76,31 +99,40 @@ class RecordArray:
         t["dtype"].append(dtype)
         t["group"].append(group)
         t["hops"].append(hops)
+        if self.stages:
+            if bounds is None:
+                raise ValueError("stage-enabled RecordArray needs bounds")
+            for f, b in zip(BOUNDARY_FIELDS, bounds):
+                t[f].append(b)
         self._len += 1
-        self._arrays = self._stats = None
-        self._tails = {}
+        self._invalidate()
 
     def _flush_tail(self) -> None:
         if self._tail["latency"]:
             self._chunks.append({
                 f: np.asarray(self._tail[f], dtype=dt)
-                for f, dt in zip(_FIELDS, _DTYPES)})
-            self._tail = {f: [] for f in _FIELDS}
+                for f, dt in zip(self._fields, self._dtypes)})
+            self._tail = {f: [] for f in self._fields}
 
     def extend_columns(self, t_start: np.ndarray, latency: np.ndarray,
                        kind: np.ndarray, dtype: np.ndarray,
-                       group: np.ndarray, hops: np.ndarray) -> None:
+                       group: np.ndarray, hops: np.ndarray,
+                       bounds: Optional[Sequence[np.ndarray]] = None) -> None:
         """Bulk-load a completed batch (the vectorized engine's exit path).
 
         The arrays are adopted as a segment without conversion — callers
         must not mutate them afterwards.
         """
         self._flush_tail()
-        self._chunks.append(dict(zip(_FIELDS, (t_start, latency, kind,
-                                               dtype, group, hops))))
+        seg = dict(zip(_FIELDS, (t_start, latency, kind, dtype, group,
+                                 hops)))
+        if self.stages:
+            if bounds is None:
+                raise ValueError("stage-enabled RecordArray needs bounds")
+            seg.update(zip(BOUNDARY_FIELDS, bounds))
+        self._chunks.append(seg)
         self._len += len(latency)
-        self._arrays = self._stats = None
-        self._tails = {}
+        self._invalidate()
 
     # ------------------------------------------------------------ columns
     def columns(self) -> dict:
@@ -110,9 +142,11 @@ class RecordArray:
                 self._arrays = self._chunks[0]
             else:
                 segs = self._chunks or [{
-                    f: np.empty(0, dt) for f, dt in zip(_FIELDS, _DTYPES)}]
+                    f: np.empty(0, dt)
+                    for f, dt in zip(self._fields, self._dtypes)}]
                 self._arrays = {
-                    f: np.concatenate([s[f] for s in segs]) for f in _FIELDS}
+                    f: np.concatenate([s[f] for s in segs])
+                    for f in self._fields}
                 self._chunks = [self._arrays]
         return self._arrays
 

@@ -60,7 +60,6 @@ scan/reduction association order differs.  The jitted call runs under
 """
 from __future__ import annotations
 
-import time
 from dataclasses import asdict, dataclass
 from functools import lru_cache
 from itertools import product
@@ -73,6 +72,8 @@ from jax.experimental import enable_x64
 
 from repro.core.hashring import ChordRing, stable_hash
 from repro.kernels.maxplus_scan import maxplus_depart
+from repro.obs import walltime
+from repro.obs.trace import STAGES as OBS_STAGES
 
 from .cluster import ServiceParams, arrival_seed, closed_loop_plan
 from .network import SETTINGS
@@ -247,22 +248,28 @@ def _compiled(max_hops: int, scan_backend: str, interpret: bool):
 
     def row_chain(tblr, t0, is_w, glob, lf, hops, pens):
         """Per-row arrival/service delay columns from the config's
-        stacked component table — vmapped over the row axis."""
+        stacked component table — vmapped over the row axis.  Also
+        returns the span-model cuts (b_request, b_route) the chain
+        passes on the way, for the per-stage aggregates."""
         def pick(name):
             return jnp.where(is_w, tblr[name][1], tblr[name][0])
+        cuts: list = []
         arr = arrival_chain(jnp, t0, pick("c_req"), pick("f_req"),
                             pick("sg_req"), pick("h_req"), lf, glob, hops,
-                            max_hops)
+                            max_hops, cuts=cuts)
         svc = pick("svc_base") + pens
-        return arr, svc
+        return arr, svc, cuts[0], cuts[1]
 
     def row_completion(tblr, dep, is_w, glob, lf, remote):
         def pick(name):
             return jnp.where(is_w, tblr[name][1], tblr[name][0])
         q_or_ri = jnp.where(is_w, tblr["q_ri"][1], tblr["q_ri"][0])
-        return completion_chain(jnp, dep, q_or_ri, pick("sg_resp"),
+        cuts: list = []
+        comp = completion_chain(jnp, dep, q_or_ri, pick("sg_resp"),
                                 pick("g_resp"), pick("f_resp"),
-                                pick("c_resp"), lf, glob, remote)
+                                pick("c_resp"), lf, glob, remote,
+                                cuts=cuts)
+        return comp, cuts[0]
 
     def program(tblr, flat, gidx):
         # row-space views: one gather per op column (padding index points
@@ -272,7 +279,7 @@ def _compiled(max_hops: int, scan_backend: str, interpret: bool):
         t0, is_w, glob = take("t0"), take("is_w"), take("glob")
         lf, remote = take("lf"), take("remote")
         valid = gidx < flat["t0"].shape[0] - 1
-        arr, svc = jax.vmap(row_chain)(
+        arr, svc, b_req, b_route = jax.vmap(row_chain)(
             tblr, t0, is_w, glob, lf, take("hops"), take("pens"))
 
         # the leader FIFO stage: batched max-plus departure scan, one
@@ -283,8 +290,26 @@ def _compiled(max_hops: int, scan_backend: str, interpret: bool):
         else:
             dep = maxplus_depart(arr, svc, backend="assoc")
 
-        comp = jax.vmap(row_completion)(tblr, dep, is_w, glob, lf, remote)
+        comp, b_repl = jax.vmap(row_completion)(
+            tblr, dep, is_w, glob, lf, remote)
         lat = comp - t0
+
+        # span-model boundaries (rows are already leader-arrival order):
+        # service start = max(arrival, previous departure), clamped to
+        # the departure because the closed-form scans reassociate float
+        # adds and may sit an ulp off the sequential recurrence
+        prev = jnp.concatenate(
+            [jnp.full((dep.shape[0], 1), -jnp.inf, dep.dtype),
+             dep[:, :-1]], axis=1)
+        start = jnp.minimum(jnp.maximum(arr, prev), dep)
+        # per-row per-stage duration sums (open loop has no lease stage);
+        # the host folds rows into per-point means alongside cnt4/sum4
+        stage_sum = jnp.stack([
+            jnp.sum(jnp.where(valid, d, 0.0), axis=1)
+            for d in (b_req - t0, b_route - b_req,
+                      jnp.zeros_like(t0),          # lease
+                      arr - b_route, start - arr, dep - start,
+                      b_repl - dep, comp - b_repl)], axis=1)
 
         # per-row aggregates over (is_write x is_global) categories; the
         # host folds rows into per-point kind/dtype means
@@ -293,7 +318,8 @@ def _compiled(max_hops: int, scan_backend: str, interpret: bool):
                   valid & is_w & ~glob, valid & is_w & glob):
             cnt4.append(jnp.sum(m, axis=1))
             sum4.append(jnp.sum(jnp.where(m, lat, 0.0), axis=1))
-        return jnp.stack(cnt4, axis=1), jnp.stack(sum4, axis=1), lat
+        return jnp.stack(cnt4, axis=1), jnp.stack(sum4, axis=1), lat, \
+            stage_sum
 
     return jax.jit(program)
 
@@ -371,7 +397,7 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
                            max_rounds=max_rounds)
     if devices != 1:
         raise ValueError("devices > 1 requires loop='closed'")
-    t_wall = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    t_wall = walltime()
     svcp = service or ServiceParams()
     dm = _DelayModel(SETTINGS[setting], svcp)
     capacity = max(1, svcp.page_cache_keys)
@@ -466,7 +492,7 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
         interpret = jax.default_backend() != "tpu"
     fn = _compiled(max_hops, scan_backend, bool(interpret))
     with enable_x64():
-        cnt4, sum4, lat_rows = jax.device_get(fn(
+        cnt4, sum4, lat_rows, stage_sum = jax.device_get(fn(
             {k: jnp.asarray(v) for k, v in tblr.items()},
             {k: jnp.asarray(v) for k, v in flat.items()
              if k != "client"},
@@ -495,6 +521,14 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
         s = sum_pt[:, list(cats)].sum(axis=1)
         cols[name] = np.where(c > 0, s / np.maximum(c, 1), np.nan)
 
+    # per-point per-stage mean durations (span model, program aggregates)
+    n_ops_pt = cnt_pt.sum(axis=1)
+    stage_sum = np.asarray(stage_sum, np.float64)
+    for si, stage in enumerate(OBS_STAGES):
+        s = np.bincount(row_tbl_arr, stage_sum[:, si], minlength=N)
+        cols[f"stage_{stage}"] = np.where(
+            n_ops_pt > 0, s / np.maximum(n_ops_pt, 1), np.nan)
+
     # paper-metric throughput (average of per-client rates) and tails,
     # from the op-order latency column — same expressions as
     # RecordArray.group_stats / tail_latency
@@ -519,7 +553,7 @@ def run_sweep(points: Iterable[SweepPoint], *, duration: float = 2.0,
     cols["throughput"] = thr
     for q, t in zip(qs, tails):
         cols[f"p{q:g}_latency"] = t
-    return SweepResult(points, cols, time.perf_counter() - t_wall)  # lint: ignore[EDK004] -- walltime reporting
+    return SweepResult(points, cols, walltime() - t_wall)
 
 
 # ===================================================== closed-loop sweep
@@ -667,13 +701,15 @@ def _closed_round_fn(max_hops: int, scan_backend: str, interpret: bool,
                      max_rounds: int, seek: float, R: int, Ls: int):
     """The raw (unjitted) fixed-point program for one device block."""
 
-    def one_round(comp, flat, aux):
+    def one_round(comp, flat, aux, pieces=None):
         n = comp.shape[0]
         t0 = jnp.where(flat["first"], 0.0,
                        jnp.take(comp, flat["pred"], mode="clip"))
+        cuts = [] if pieces is not None else None
         arr = arrival_chain(jnp, t0, flat["c_req"], flat["f_req"],
                             flat["sg_req"], flat["h_req"], flat["lf"],
-                            flat["glob"], flat["hops"], max_hops)
+                            flat["glob"], flat["hops"], max_hops,
+                            cuts=cuts)
         # one stable composite sort of the real ops by (row, arrival)
         # recovers every leader queue at once: stability breaks exact
         # arrival ties by flat index = (pid, op) order, the heap
@@ -710,10 +746,24 @@ def _closed_round_fn(max_hops: int, scan_backend: str, interpret: bool,
         dep_ord = jnp.take(dep_grid.reshape(-1), aux["dest"],
                            mode="fill", fill_value=0.0)
         dep = jnp.zeros((n,), comp.dtype).at[perm].set(dep_ord)
-        return completion_chain(jnp, dep, flat["q_ri"], flat["sg_resp"],
-                                flat["g_resp"], flat["f_resp"],
-                                flat["c_resp"], flat["lf"], flat["glob"],
-                                flat["remote"])
+        ccuts = [] if pieces is not None else None
+        new = completion_chain(jnp, dep, flat["q_ri"], flat["sg_resp"],
+                               flat["g_resp"], flat["f_resp"],
+                               flat["c_resp"], flat["lf"], flat["glob"],
+                               flat["remote"], cuts=ccuts)
+        if pieces is not None:
+            # span-model pieces: service start = max(arrival, previous
+            # departure) per queue slot, clamped to the departure (the
+            # closed-form scan backends may reassociate by an ulp)
+            prev = jnp.concatenate(
+                [jnp.full((R, 1), -jnp.inf, dep_grid.dtype),
+                 dep_grid[:, :-1]], axis=1)
+            start_grid = jnp.minimum(jnp.maximum(grid_a, prev), dep_grid)
+            start_ord = jnp.take(start_grid.reshape(-1), aux["dest"],
+                                 mode="fill", fill_value=0.0)
+            start = jnp.zeros((n,), comp.dtype).at[perm].set(start_ord)
+            pieces.extend([cuts[0], cuts[1], arr, start, dep, ccuts[0]])
+        return new
 
     def run(flat, aux):
         n = flat["c_req"].shape[0]
@@ -732,7 +782,12 @@ def _closed_round_fn(max_hops: int, scan_backend: str, interpret: bool,
             cond, body, (comp0, jnp.asarray(False), jnp.asarray(0)))
         t0 = jnp.where(flat["first"], 0.0,
                        jnp.take(comp, flat["pred"], mode="clip"))
-        return comp, t0, done, rounds
+        # one idempotent replay of the converged round keeps the span
+        # pieces (b_request, b_route, arrival, start, departure,
+        # b_replicate) as extra device outputs — no host callbacks
+        pieces: list = []
+        one_round(comp, flat, aux, pieces=pieces)
+        return comp, t0, done, rounds, jnp.stack(pieces)
 
     return run
 
@@ -756,38 +811,48 @@ def _closed_exe(max_hops: int, scan_backend: str, interpret: bool,
     spec = PartitionSpec("pt")
 
     def shard_fn(flat, aux):
-        comp, t0, done, r = run({k: v[0] for k, v in flat.items()},
-                                {k: v[0] for k, v in aux.items()})
-        return comp[None], t0[None], done[None], r[None]
+        comp, t0, done, r, pieces = run(
+            {k: v[0] for k, v in flat.items()},
+            {k: v[0] for k, v in aux.items()})
+        return comp[None], t0[None], done[None], r[None], pieces[None]
 
     # check_rep off: each shard runs its own data-dependent while_loop
     # trip count (idempotent past its fixed point, so shards that
     # converge early stay bit-identical to the single-device program)
     return jax.jit(shard_map(shard_fn, mesh=mesh,
                              in_specs=(spec, spec),
-                             out_specs=(spec, spec, spec, spec),
+                             out_specs=(spec,) * 5,
                              check_rep=False))
 
 
 def _closed_rounds_host(built: Sequence[dict], capacity: int, seek: float,
                         max_hops: int, max_rounds: int
-                        ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+                        ) -> Tuple[List[np.ndarray], List[np.ndarray],
+                                   List[np.ndarray]]:
     """Host-side fixed point for grids in the eviction regime: same
     rounds, same float64 expressions, but page penalties come from the
     exact LRU replay (:func:`~repro.sim.vectorized.lru_hit_mask`, stack
-    distances and all) instead of the in-program seen-before mask."""
-    comp_pt, t0_pt = [], []
+    distances and all) instead of the in-program seen-before mask.
+
+    Also returns the span-model pieces ``(b_request, b_route, arrival,
+    start, departure, b_replicate)`` stacked per point: the round that
+    detects convergence recomputes them from the already-converged
+    completions, so its intermediates ARE the fixed point's.
+    """
+    comp_pt, t0_pt, pieces_pt = [], [], []
     for b in built:
         flat, n = b["flat"], b["n"]
         comp = np.full(n, np.inf)
         t0 = np.zeros(n)
         for _ in range(max_rounds):
             t0 = np.where(flat["first"], 0.0, comp[flat["pred"]])
+            cuts: list = []
             arr = arrival_chain(np, t0, flat["c_req"], flat["f_req"],
                                 flat["sg_req"], flat["h_req"],
                                 flat["lf"], flat["glob"], flat["hops"],
-                                max_hops)
+                                max_hops, cuts=cuts)
             dep = np.zeros(n)
+            start = np.zeros(n)
             for m in b["rows"]:
                 order = m[np.argsort(arr[m], kind="stable")]
                 hitm = lru_hit_mask(flat["key"][order], capacity)
@@ -795,20 +860,25 @@ def _closed_rounds_host(built: Sequence[dict], capacity: int, seek: float,
                 arr_o = arr[order].tolist()
                 svc_o = svc.tolist()
                 dep_o = np.empty(len(order))
+                start_o = np.empty(len(order))
                 d = -np.inf
                 # sequential recurrence in the engine's exact float
                 # order (start = max(a, free); dep = start + svc) —
                 # the closed-form numpy scan reassociates and its ulp
                 # drift can flip near-tied queue orders across rounds
                 for j, (a_j, s_j) in enumerate(zip(arr_o, svc_o)):
-                    d = (a_j if a_j > d else d) + s_j
+                    st = a_j if a_j > d else d
+                    start_o[j] = st
+                    d = st + s_j
                     dep_o[j] = d
                 dep[order] = dep_o
+                start[order] = start_o
+            ccuts: list = []
             new = completion_chain(np, dep, flat["q_ri"],
                                    flat["sg_resp"], flat["g_resp"],
                                    flat["f_resp"], flat["c_resp"],
                                    flat["lf"], flat["glob"],
-                                   flat["remote"])
+                                   flat["remote"], cuts=ccuts)
             if np.array_equal(new, comp):
                 break
             comp = new
@@ -818,7 +888,9 @@ def _closed_rounds_host(built: Sequence[dict], capacity: int, seek: float,
                 "rounds (host/LRU path); raise max_rounds")
         comp_pt.append(comp)
         t0_pt.append(t0)
-    return comp_pt, t0_pt
+        pieces_pt.append(np.stack([cuts[0], cuts[1], arr, start, dep,
+                                   ccuts[0]]))
+    return comp_pt, t0_pt, pieces_pt
 
 
 def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
@@ -826,7 +898,7 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
                 scan_backend: str, interpret: Optional[bool],
                 percentiles: Sequence[float], devices: int,
                 max_rounds: Optional[int]) -> SweepResult:
-    t_wall = time.perf_counter()  # lint: ignore[EDK004] -- walltime reporting
+    t_wall = walltime()
     for p in points:
         if p.threads < 1 or p.ops < 1:
             raise ValueError(
@@ -850,15 +922,15 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
             seek)
 
     if any(b["evict"] for b in built):
-        comp_pt, t0_pt = _closed_rounds_host(built, capacity, seek,
-                                             max_hops, max_rounds)
+        comp_pt, t0_pt, pieces_pt = _closed_rounds_host(
+            built, capacity, seek, max_hops, max_rounds)
     elif devices == 1:
         blk = _closed_assemble(built)
         R = len(blk["rows"])
         Ls = max(len(m) for m in blk["rows"])
         flat, aux = _closed_pad(blk, blk["n"], R, Ls)
         with enable_x64():
-            comp, t0f, done, _ = jax.device_get(_closed_exe(
+            comp, t0f, done, _, pieces = jax.device_get(_closed_exe(
                 *args, R, Ls, 1, "jit")(
                 {k: jnp.asarray(v) for k, v in flat.items()},
                 {k: jnp.asarray(v) for k, v in aux.items()}))
@@ -866,10 +938,11 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
             raise RuntimeError(
                 f"closed-loop sweep did not converge in {max_rounds} "
                 "rounds; raise max_rounds")
-        comp_pt, t0_pt, off = [], [], 0
+        comp_pt, t0_pt, pieces_pt, off = [], [], [], 0
         for b in built:
             comp_pt.append(comp[off:off + b["n"]])
             t0_pt.append(t0f[off:off + b["n"]])
+            pieces_pt.append(pieces[:, off:off + b["n"]])
             off += b["n"]
     else:
         if devices > jax.local_device_count():
@@ -902,19 +975,21 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
                     out = _closed_exe(*sh, D, "shard")(flat_j, aux_j)
                 except Exception:  # pragma: no cover - jax-version paths
                     out = _closed_exe(*sh, D, "pmap")(flat_j, aux_j)
-            comp_s, t0_s, done_s, _ = jax.device_get(out)
+            comp_s, t0_s, done_s, _, pieces_s = jax.device_get(out)
         if not bool(np.all(done_s)):
             raise RuntimeError(
                 f"closed-loop sweep did not converge in {max_rounds} "
                 "rounds; raise max_rounds")
         comp_pt = [np.empty(0)] * len(points)
         t0_pt = [np.empty(0)] * len(points)
+        pieces_pt = [np.empty((6, 0))] * len(points)
         for d, idxs in enumerate(dev_pts):
             off = 0
             for pi in idxs:
                 n = built[pi]["n"]
                 comp_pt[pi] = comp_s[d, off:off + n]
                 t0_pt[pi] = t0_s[d, off:off + n]
+                pieces_pt[pi] = pieces_s[d, :, off:off + n]
                 off += n
 
     # ---- fold into per-point RecordArray-style aggregates ----
@@ -927,10 +1002,24 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
         cols[name] = np.zeros(N)
     cols["throughput"] = np.zeros(N)
     cols["mean_hops"] = np.zeros(N)
+    for stage in OBS_STAGES:
+        cols[f"stage_{stage}"] = np.zeros(N)
     tails = np.zeros((len(qs), N))
     for pi, (p, b) in enumerate(zip(points, built)):
         lat = np.asarray(comp_pt[pi]) - np.asarray(t0_pt[pi])
         is_w, glob = b["is_w"], b["glob"]
+
+        # per-stage mean durations from the converged round's pieces;
+        # closed points have no lease stage, so that bound repeats
+        # b_route (zero duration)
+        b_req, b_route, arr, start, dep, b_repl = np.asarray(
+            pieces_pt[pi], np.float64)
+        bounds9 = (np.asarray(t0_pt[pi]), b_req, b_route, b_route, arr,
+                   start, dep, b_repl, np.asarray(comp_pt[pi]))
+        for si, stage in enumerate(OBS_STAGES):
+            d = bounds9[si + 1] - bounds9[si]
+            cols[f"stage_{stage}"][pi] = (float(d.mean()) if len(d)
+                                          else float("nan"))
 
         def mean(m):
             return float(lat[m].mean()) if m.any() else float("nan")
@@ -960,4 +1049,4 @@ def _run_closed(points: List[SweepPoint], *, setting: str, seed: int,
             tails[:, pi] = np.percentile(lat, qs)
     for q, t in zip(qs, tails):
         cols[f"p{q:g}_latency"] = t
-    return SweepResult(points, cols, time.perf_counter() - t_wall)  # lint: ignore[EDK004] -- walltime reporting
+    return SweepResult(points, cols, walltime() - t_wall)

@@ -316,6 +316,12 @@ class _FastEngine:
         self.t_start = [0.0] * n_ops
         self.completion = [0.0] * n_ops
         self.latency = [0.0] * n_ops
+        # span tracing: the 7 intermediate stage boundaries (b_end is the
+        # completion column). NaN = stage not entered, filled forward at
+        # finish — mirroring the oracle's fill_bounds
+        self.trace = sim.records.stages
+        self.b_cols: List[List[float]] = [
+            [float("nan")] * n_ops for _ in range(7)] if self.trace else []
 
     def _static_shapes(self, plan: List[ThreadPlan],
                        globals_too: bool = True) -> None:
@@ -460,6 +466,10 @@ class _FastEngine:
         pop, push = heapq.heappop, heapq.heappush
         max_completion = 0.0
         arrival_phase = self.arrival_phase = [True] * len(cursor)
+        trace = self.trace
+        if trace:
+            b_req, b_route, b_lease, b_ingr, b_queue, b_svc, b_repl = \
+                self.b_cols
 
         # Two-phase dynamic routing: once membership can change mid-run
         # (location caches, churn, faults), a global op's route must
@@ -476,12 +486,30 @@ class _FastEngine:
                 w = is_w[i]
                 tl = t0c + dm.c_req[w]
                 tl += dm.sg_req[w]
+                if trace:
+                    b_req[i] = tl
                 arrival_phase[tau] = False
                 push(heap, (tl, op_pid[i], tau))
                 return
             a = t0c
-            for comp in op_pre[i]:
-                a += comp
+            if trace and dtypes[i]:
+                # static global op: the pre tuple is
+                # [c_req, sg_req] + [h_req]*hops + [sg_req] — same adds
+                # as below, sampling the span cuts on the way
+                pre = op_pre[i]
+                a += pre[0]
+                a += pre[1]
+                b_req[i] = a                    # after gateway admit
+                for comp in pre[2:-1]:
+                    a += comp
+                b_route[i] = b_lease[i] = a     # after overlay hops
+                a += pre[-1]
+                b_ingr[i] = a                   # after gw -> leader
+            else:
+                for comp in op_pre[i]:
+                    a += comp
+                if trace:
+                    b_req[i] = a                # local: cli (+fwd) done
             arrival_phase[tau] = True
             push(heap, (a, op_pid[i], tau))
 
@@ -532,7 +560,11 @@ class _FastEngine:
                 h = dm.h_req[w]
                 for _ in range(self.hops[i]):
                     a += h
+                if trace:
+                    b_route[i] = b_lease[i] = a
                 a += dm.sg_req[w]
+                if trace:
+                    b_ingr[i] = a
                 arrival_phase[tau] = True
                 push(heap, (a, pid, tau))
                 continue
@@ -575,6 +607,14 @@ class _FastEngine:
                             (dtypes[i], w, False, self.hops[i],
                              dst != self._l_client[i], self.n_of[dst]))
                         op_svc[i], op_post[i] = prof[1], prof[2]
+                        if trace:
+                            # the detour shifts the remaining boundaries;
+                            # the fast engine pays it after ingress (the
+                            # oracle before) — within the lease-run
+                            # statistical contract, bit-free runs have
+                            # no leases
+                            b_lease[i] += dm.h_req[w]
+                            b_ingr[i] = a + dm.h_req[w]
                         push(heap, (a + dm.h_req[w], pid, tau))
                         continue
                     if w:
@@ -591,6 +631,9 @@ class _FastEngine:
                             stores[1][serving[i]][op_key[i]] = val
                         unavail.pop(op_key[i], None)
                         del leases[op_key[i]]
+                        if trace:
+                            b_lease[i] += pull_xfer
+                            b_ingr[i] = a + pull_xfer
                         push(heap, (a + pull_xfer, pid, tau))
                         continue
             g = serving[i]
@@ -637,8 +680,17 @@ class _FastEngine:
             elif dt and unavail and key in unavail:
                 sim.lost_ops += 1  # read of a crashed, un-promoted key
             c = dep
-            for comp in op_post[i]:
-                c += comp
+            if trace:
+                b_queue[i] = start
+                b_svc[i] = dep
+                post = op_post[i]
+                c += post[0]                 # quorum / ReadIndex round
+                b_repl[i] = c
+                for comp in post[1:]:
+                    c += comp
+            else:
+                for comp in op_post[i]:
+                    c += comp
             latency[i] = c - t_start[i]
             completion[i] = c
             if c > max_completion:
@@ -665,12 +717,27 @@ class _FastEngine:
         # the oracle appends records at completion-event execution, i.e. in
         # (completion time, pid) order — reproduce it exactly
         order = np.lexsort((self.op_pid, comp))
+        bounds = None
+        if self.trace:
+            # fill stages an op never entered forward from t_start
+            # (vectorized fill_bounds), then append b_end = completion
+            prev = np.asarray(self.t_start)
+            bounds = []
+            for col in self.b_cols:
+                filled = np.asarray(col)
+                nan = np.isnan(filled)
+                if nan.any():
+                    filled = np.where(nan, prev, filled)
+                bounds.append(filled[order])
+                prev = filled
+            bounds.append(comp[order])
         sim.records.extend_columns(
             np.asarray(self.t_start)[order],
             np.asarray(self.latency)[order],
             self.kind[order], self.dtype[order],
             self.client_code[order],
-            np.asarray(self.hops, dtype=np.int32)[order])
+            np.asarray(self.hops, dtype=np.int32)[order],
+            bounds=bounds)
 
 
 def plan_columns(plan: List[ThreadPlan], code_of_gid) -> dict:
@@ -710,7 +777,7 @@ def run_closed_loop_fast(sim: SimEdgeKV, plan: List[ThreadPlan]) -> None:
 
 # --------------------------------------------------- pure delay columns
 def arrival_chain(xp, t0, c_req, f_req, sg_req, h_req, lf, glob, hops,
-                  max_hops: int):
+                  max_hops: int, cuts: Optional[list] = None):
     """Leader-arrival times from per-op delay-component columns.
 
     Masked sequential adds in the oracle's Timeout term order (float
@@ -718,22 +785,37 @@ def arrival_chain(xp, t0, c_req, f_req, sg_req, h_req, lf, glob, hops,
     contract).  Pure in ``xp`` — numpy for the per-run fast engine,
     jax.numpy inside the jitted sweep program — so both paths evaluate
     bitwise the same float64 expression.
+
+    ``cuts`` (tracing) collects the span-model stage boundaries as the
+    chain passes them: ``b_request`` (client link, forward hop, gateway
+    admit), ``b_route`` (after the overlay hops), ``b_ingress`` (after
+    gw -> leader) — intermediate values of the SAME adds, so traced runs
+    cost nothing extra and cannot drift from the untraced clock.
     """
     arr = t0 + c_req
     arr = xp.where(lf, arr + f_req, arr)
     arr = xp.where(glob, arr + sg_req, arr)
+    if cuts is not None:
+        cuts.append(arr)                 # b_request
     for k in range(max_hops):
         arr = xp.where(hops > k, arr + h_req, arr)
+    if cuts is not None:
+        cuts.append(arr)                 # b_route
     arr = xp.where(glob, arr + sg_req, arr)
+    if cuts is not None:
+        cuts.append(arr)                 # b_ingress
     return arr
 
 
 def completion_chain(xp, dep, q_or_ri, sg_resp, g_resp, f_resp, c_resp,
-                     lf, glob, remote):
+                     lf, glob, remote, cuts: Optional[list] = None):
     """Completion times from leader departures: quorum/ReadIndex round,
     then the response hop chain (same masked-sequential-add contract as
-    :func:`arrival_chain`)."""
+    :func:`arrival_chain`).  ``cuts`` collects ``b_replicate`` (after the
+    quorum/ReadIndex round) for tracing."""
     comp = dep + q_or_ri
+    if cuts is not None:
+        cuts.append(comp)                # b_replicate
     comp = xp.where(glob, comp + sg_resp, comp)
     comp = xp.where(remote, comp + g_resp, comp)
     comp = xp.where(glob, comp + sg_resp, comp)
@@ -1130,19 +1212,29 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     def by_w(pair):
         return np.where(is_w, pair[1], pair[0])
 
+    trace = sim.records.stages
+    cuts: Optional[list] = [] if trace else None
     arr = arrival_chain(np, t0, by_w(dm.c_req), by_w(dm.f_req),
                         by_w(dm.sg_req), by_w(dm.h_req), lf, glob, hops,
-                        int(hops.max()) if n_ops else 0)
+                        int(hops.max()) if n_ops else 0, cuts=cuts)
     if pen is not None:
         # lease pull transfers delay the leader arrival of the reads that
         # completed a key's migration on demand (async handoff)
         arr = arr + pen
+    if trace:
+        b_request, b_route = cuts[0], cuts[1]
+        # the pull transfer is the lease stage; with pen None the lease
+        # boundary collapses onto b_route bitwise (zero-duration stage)
+        b_lease = cuts[1] + pen if pen is not None else cuts[1]
+        b_ingress = arr
 
     # leader stage: per-group LRU replay + max-plus departure scan in
     # arrival order (writes were already applied per epoch under churn).
     # Refused ops never reach a leader: no page-cache touch, no service.
     ids = sim.records._group_ids
     dep = np.zeros(n_ops)
+    if trace:
+        b_queue, b_service = np.zeros(n_ops), np.zeros(n_ops)
     svc_base = np.where(is_w, dm.svc_base[1], dm.svc_base[0])
     alive = ~refused if refused is not None else np.ones(n_ops, bool)
     for g in np.unique(serving[alive]).tolist():
@@ -1153,16 +1245,28 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                                   dtype[order], dm.seek,
                                   apply_writes=not had_aux)
         svc = svc_base[order] + pens
-        dep[order] = maxplus_depart(arr[order], svc)
+        dep_g = maxplus_depart(arr[order], svc)
+        dep[order] = dep_g
+        if trace:
+            # service start = max(arrival, previous departure); clamped to
+            # the departure because the closed-form max-plus kernel may
+            # differ from the sequential recurrence by ulps
+            prev_dep = np.concatenate(([-np.inf], dep_g[:-1]))
+            start = np.minimum(np.maximum(arr[order], prev_dep), dep_g)
+            b_queue[order] = start
+            b_service[order] = dep_g
         grp["leader"].busy_time += float(svc.sum())
 
     sizes = [sim.groups[g]["n"] for g in ids]
     q_by_code = np.asarray([dm.quorum(n) for n in sizes])
     ri_by_code = np.asarray([dm.readindex(n) for n in sizes])
     q_or_ri = np.where(is_w, q_by_code[serving], ri_by_code[serving])
+    cuts2: Optional[list] = [] if trace else None
     comp = completion_chain(np, dep, q_or_ri, by_w(dm.sg_resp),
                             by_w(dm.g_resp), by_w(dm.f_resp),
-                            by_w(dm.c_resp), lf, glob, remote)
+                            by_w(dm.c_resp), lf, glob, remote, cuts=cuts2)
+    if trace:
+        b_replicate = cuts2[0]
     if refused is not None and refused.any():
         # refused ops complete with the error-ack chain instead: refusal
         # instant (client link, fwd hop, gateway lookup — wherever the
@@ -1175,8 +1279,21 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
                             np.where(lf, t_ref + err_f, t_ref)) + err_cli
         comp = np.where(refused, comp_ref, comp)
         hops = np.where(refused, 0, hops).astype(np.int32)
+        if trace:
+            # refused ops collapse every post-refusal stage onto the
+            # refusal instant (b_request == t_ref bitwise by construction:
+            # the arrival chain's first cut IS the same add sequence)
+            for col in (b_route, b_lease, b_ingress, b_queue, b_service,
+                        b_replicate):
+                col[:] = np.where(refused, t_ref, col)
 
     order = np.lexsort((np.arange(n_ops), comp))
+    bounds = None
+    if trace:
+        bounds = [b[order] for b in (b_request, b_route, b_lease, b_ingress,
+                                     b_queue, b_service, b_replicate)]
+        bounds.append(comp[order])
     sim.records.extend_columns(t0[order], (comp - t0)[order], kind[order],
-                               dtype[order], client[order], hops[order])
+                               dtype[order], client[order], hops[order],
+                               bounds=bounds)
     sim.env.now = max(sim.env.now, float(comp.max()))

@@ -1,0 +1,13 @@
+"""Near miss: host timing routed through the repro.obs seam."""
+from repro.obs import timed, walltime
+
+
+def timed_run(fn):
+    t0 = walltime()
+    fn()
+    return walltime() - t0
+
+
+def timed_result(fn):
+    out, elapsed = timed(fn)
+    return elapsed

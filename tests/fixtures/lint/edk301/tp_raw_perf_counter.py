@@ -1,0 +1,12 @@
+"""True positive: raw perf_counter timing instead of repro.obs."""
+import time
+
+
+def timed_run(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def stamp():
+    return time.time()

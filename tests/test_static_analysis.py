@@ -69,7 +69,7 @@ def test_rule_catalog_shape():
     assert set(RULES) == {
         "EDK001", "EDK002", "EDK003", "EDK004",
         "EDK101", "EDK102", "EDK103", "EDK104",
-        "EDK201", "EDK202", "EDK203"}
+        "EDK201", "EDK202", "EDK203", "EDK301"}
     for rule in RULES.values():
         assert rule.summary
         assert rule.severity in ("error", "warning")
