@@ -30,6 +30,7 @@ _FAILOVER_ROWS: list = []
 _HANDOFF_ROWS: list = []
 _SCENARIO_ROWS: list = []
 _TRACE_ROWS: list = []
+_REBALANCE_ROWS: list = []
 _CHECK_MODE = False
 _ROOT = Path(__file__).resolve().parent.parent
 _JSON_PATH = _ROOT / "BENCH_sweep.json"
@@ -37,6 +38,7 @@ _FAILOVER_JSON_PATH = _ROOT / "BENCH_failover.json"
 _HANDOFF_JSON_PATH = _ROOT / "BENCH_handoff.json"
 _SCENARIOS_JSON_PATH = _ROOT / "BENCH_scenarios.json"
 _TRACE_JSON_PATH = _ROOT / "BENCH_trace.json"
+_REBALANCE_JSON_PATH = _ROOT / "BENCH_rebalance.json"
 _CHECK_REPORT_PATH = _ROOT / "BENCH_check_report.json"
 
 
@@ -78,6 +80,13 @@ def _write_trace_json():
         return
     _TRACE_JSON_PATH.write_text(json.dumps(
         dict(rows=_TRACE_ROWS), indent=1, sort_keys=True) + "\n")
+
+
+def _write_rebalance_json():
+    if _CHECK_MODE:
+        return
+    _REBALANCE_JSON_PATH.write_text(json.dumps(
+        dict(rows=_REBALANCE_ROWS), indent=1, sort_keys=True) + "\n")
 
 
 def _timed(name, fn):
@@ -380,6 +389,37 @@ def bench_fig_scenarios():
                                        if isinstance(v, float) else v)
                                    for k, v in r.items()})
     _write_scenarios_json()
+
+
+def bench_fig_rebalance():
+    """Feedback-driven rebalancing: a mid-run Zipf skew shift with and
+    without the RebalanceController (weighted ring re-arcing + bounded
+    hot-key read mirrors), on both engines, with the recovery accounting
+    mirrored into the committed BENCH_rebalance.json."""
+    from repro.sim.experiments import fig_rebalance
+    for r in fig_rebalance():
+        s = f"{r['mode']}.{r['engine']}"
+        _row(f"fig_rebalance.pre_p99_ms.{s}", f"{r['pre_p99_ms']:.2f}",
+             f"mean={r['pre_mean_ms']:.2f};p95={r['pre_p95_ms']:.2f};"
+             f"ops={r['pre_ops']}")
+        _row(f"fig_rebalance.post_p99_ms.{s}", f"{r['post_p99_ms']:.2f}",
+             f"mean={r['post_mean_ms']:.2f};p95={r['post_p95_ms']:.2f};"
+             f"ops={r['post_ops']}")
+        _row(f"fig_rebalance.throughput_ops.{s}",
+             f"{r['throughput_ops']:.0f}",
+             f"clients={r['clients']};lost_ops={r['lost_ops']}")
+        _row(f"fig_rebalance.controller.{s}", f"{r['reweights']}",
+             f"keys_moved={r['keys_moved']};"
+             f"hot_installed={r['hot_installed']};"
+             f"hot_dropped={r['hot_dropped']};"
+             f"hot_invalidated={r['hot_invalidated']};"
+             f"mirror_reads={r['mirror_reads']};"
+             f"leases={r['leases_acquired']}")
+        _row(f"fig_rebalance.walltime_s.{s}", f"{r['walltime_s']:.2f}")
+        _REBALANCE_ROWS.append({k: (round(v, 4)
+                                    if isinstance(v, float) else v)
+                                for k, v in r.items()})
+    _write_rebalance_json()
 
 
 def bench_fig_trace():
@@ -721,6 +761,7 @@ def main(argv=None) -> int:
     _timed("fig_failover", bench_fig_failover)
     _timed("fig_handoff", bench_fig_handoff)
     _timed("fig_scenarios", bench_fig_scenarios)
+    _timed("fig_rebalance", bench_fig_rebalance)
     _timed("fig_trace", bench_fig_trace)
     _timed("fig_scale", bench_fig_scale)
     _timed("fig_scale_1m", bench_fig_scale_1m)

@@ -236,9 +236,16 @@ class TerminalIsAbsorbing(Rule):
         return None
 
 
-def _tombstone_insertions(ctx: FileContext) -> List[ast.AST]:
-    """``<...>.tombstones.setdefault(...).add/update(...)`` calls and
-    direct ``<...>.tombstones[key] = ...`` assignments."""
+#: write-superseded maps: every insertion into one of these attributes
+#: must have a revoke-on-put partner, or a stale entry outlives the
+#: fresh write it was superseded by — ``tombstones`` resurrect a delete
+#: (the PR 5 bug), ``hot_mirrors`` serve a superseded value forever
+_REVOCABLE_MAPS = ("tombstones", "hot_mirrors")
+
+
+def _revocable_insertions(ctx: FileContext, attr: str) -> List[ast.AST]:
+    """``<...>.<attr>.setdefault(...).add/update(...)`` calls and
+    direct ``<...>.<attr>[key] = ...`` assignments."""
     sites: List[ast.AST] = []
     for node in ast.walk(ctx.tree):
         if (isinstance(node, ast.Call)
@@ -248,19 +255,19 @@ def _tombstone_insertions(ctx: FileContext) -> List[ast.AST]:
                 and isinstance(node.func.value.func, ast.Attribute)
                 and node.func.value.func.attr == "setdefault"
                 and isinstance(node.func.value.func.value, ast.Attribute)
-                and node.func.value.func.value.attr == "tombstones"):
+                and node.func.value.func.value.attr == attr):
             sites.append(node)
         elif isinstance(node, ast.Assign):
             for t in node.targets:
                 if (isinstance(t, ast.Subscript)
                         and isinstance(t.value, ast.Attribute)
-                        and t.value.attr == "tombstones"):
+                        and t.value.attr == attr):
                     sites.append(t)
     return sites
 
 
-def _has_put_revoke(ctx: FileContext) -> bool:
-    """Does some ``put``-named function pop/del a ``tombstones`` entry?"""
+def _has_put_revoke(ctx: FileContext, attr: str) -> bool:
+    """Does some ``put``-named function pop/del an ``<attr>`` entry?"""
     for fn in ast.walk(ctx.tree):
         if not (isinstance(fn, FUNCTION_NODES) and "put" in fn.name):
             continue
@@ -269,13 +276,13 @@ def _has_put_revoke(ctx: FileContext) -> bool:
                     and isinstance(node.func, ast.Attribute)
                     and node.func.attr == "pop"
                     and isinstance(node.func.value, ast.Attribute)
-                    and node.func.value.attr == "tombstones"):
+                    and node.func.value.attr == attr):
                 return True
             if isinstance(node, ast.Delete):
                 for t in node.targets:
                     if (isinstance(t, ast.Subscript)
                             and isinstance(t.value, ast.Attribute)
-                            and t.value.attr == "tombstones"):
+                            and t.value.attr == attr):
                         return True
     return False
 
@@ -284,26 +291,28 @@ def _has_put_revoke(ctx: FileContext) -> bool:
 class TombstoneRevokeOnPut(Rule):
     id = "EDK203"
     severity = "error"
-    summary = ("tombstone insertions without a revoke-on-put partner "
-               "let replayed deletes resurrect over fresh writes")
+    summary = ("insertions into a write-superseded map (tombstones, "
+               "hot_mirrors) without a revoke-on-put partner let stale "
+               "entries outlive fresh writes")
     scopes = None
 
     def finalize(self, ctxs: Sequence[FileContext]) -> Iterable[Finding]:
         out: List[Finding] = []
         for universe in _universes(ctxs):
-            insertions = [(c, site) for c in universe
-                          for site in _tombstone_insertions(c)]
-            if not insertions:
-                continue
-            if any(_has_put_revoke(c) for c in universe):
-                continue
-            for ctx, site in insertions:
-                out.append(ctx.finding(
-                    self, site,
-                    "tombstone insertion has no revoke-on-put partner "
-                    "(no put-named function pops/dels the tombstones "
-                    "entry): a fresh write after delete resurrects the "
-                    "delete on replay"))
+            for attr in _REVOCABLE_MAPS:
+                insertions = [(c, site) for c in universe
+                              for site in _revocable_insertions(c, attr)]
+                if not insertions:
+                    continue
+                if any(_has_put_revoke(c, attr) for c in universe):
+                    continue
+                for ctx, site in insertions:
+                    out.append(ctx.finding(
+                        self, site,
+                        f"{attr} insertion has no revoke-on-put partner "
+                        f"(no put-named function pops/dels the {attr} "
+                        "entry): a fresh write leaves a stale entry to "
+                        "resurrect or serve a superseded value"))
         return out
 
 

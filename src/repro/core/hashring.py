@@ -85,17 +85,44 @@ class ChordRing:
         self.finger_repairs = 0     # finger entries repaired by fix_fingers()
 
     # ------------------------------------------------------------- topology
-    def add_node(self, node_id: str, weight: float = 1.0) -> None:
-        if node_id in self.nodes:
-            raise ValueError(f"node {node_id!r} already in ring")
-        count = max(1, round(self.base_vnodes * weight))
-        vhashes = []
-        for i in range(count):
+    def _vnode_count(self, weight: float) -> int:
+        """Vnode count for ``weight`` with explicit half-up rounding.
+
+        Python's ``round`` uses banker's rounding (half-to-even), which
+        maps halfway weights non-monotonically — e.g. with
+        ``base_vnodes=1``, weight 2.5 -> 2 vnodes but weight 1.5 -> 2 as
+        well, so a strictly larger weight could yield the same or fewer
+        vnodes. Floor-plus-half keeps counts monotone in the weight.
+        """
+        if weight <= 0:
+            raise ValueError(f"weight must be positive, got {weight}")
+        return max(1, int(self.base_vnodes * weight + 0.5))
+
+    def _vnode_hashes(self, node_id: str, lo: int, hi: int) -> List[int]:
+        """Deterministic vnode hashes for suffix indices ``[lo, hi)``.
+
+        The hash is a pure function of (node_id, index), so growing or
+        shrinking a node's vnode count touches exactly the suffix —
+        the incremental-reweight delta the caller adds/removes."""
+        vhashes: List[int] = []
+        for i in range(lo, hi):
             vh = stable_hash(node_id, salt=f"vnode-{i}:")
             # linear-probe extremely unlikely collisions deterministically
             while vh in self._vhashes or vh in vhashes:
                 vh = (vh + 1) % RING_SIZE
             vhashes.append(vh)
+        return vhashes
+
+    def _drop_weight(self, node_id: str) -> None:
+        """Single teardown point for a departing node's weight entry —
+        remove/crash/reweight all route through here so a reweight can
+        never observe (or leak) a stale weight."""
+        self.weights.pop(node_id, None)
+
+    def add_node(self, node_id: str, weight: float = 1.0) -> None:
+        if node_id in self.nodes:
+            raise ValueError(f"node {node_id!r} already in ring")
+        vhashes = self._vnode_hashes(node_id, 0, self._vnode_count(weight))
         self.nodes[node_id] = vhashes
         self.weights[node_id] = weight
         for vh in vhashes:
@@ -104,6 +131,48 @@ class ChordRing:
             self._vowners.insert(idx, node_id)
         self._fingers_after_add(vhashes)
         self._refresh_succ_lists()
+
+    def reweight_node(self, node_id: str,
+                      weight: float) -> Tuple[List[int], List[int]]:
+        """Change ``node_id``'s weight in place, incrementally.
+
+        Vnode hashes are a pure function of (node_id, index), so moving
+        from ``c1`` to ``c2`` vnodes adds exactly the suffix ``[c1, c2)``
+        or removes exactly ``[c2, c1)`` — only the delta touches the
+        sorted ring arrays and finger tables (same patch rules as a
+        planned join/leave; equivalence-tested against a full rebuild).
+        Returns ``(added_vhashes, removed_vhashes)``; both empty when the
+        new weight maps to the same vnode count (no key can move).
+        """
+        if node_id not in self.nodes:
+            raise KeyError(node_id)
+        vhashes = self.nodes[node_id]
+        c1, c2 = len(vhashes), self._vnode_count(weight)
+        self.weights[node_id] = weight
+        if c2 > c1:
+            added = self._vnode_hashes(node_id, c1, c2)
+            vhashes.extend(added)
+            for vh in added:
+                idx = bisect.bisect_left(self._vhashes, vh)
+                self._vhashes.insert(idx, vh)
+                self._vowners.insert(idx, node_id)
+            self._fingers_after_add(added)
+            self._refresh_succ_lists()
+            return added, []
+        if c2 < c1:
+            removed = vhashes[c2:]
+            del vhashes[c2:]
+            for vh in removed:
+                idx = bisect.bisect_left(self._vhashes, vh)
+                del self._vhashes[idx]
+                del self._vowners[idx]
+            for vh in removed:
+                self._fingers.pop(vh, None)
+                self._succ_lists.pop(vh, None)
+            self._fingers_after_remove(removed)
+            self._refresh_succ_lists()
+            return [], removed
+        return [], []
 
     def remove_node(self, node_id: str) -> None:
         """Planned departure: the node says goodbye and routing state is
@@ -117,7 +186,7 @@ class ChordRing:
             idx = bisect.bisect_left(self._vhashes, vh)
             del self._vhashes[idx]
             del self._vowners[idx]
-        self.weights.pop(node_id, None)
+        self._drop_weight(node_id)
         self._fingers_after_remove(removed)
         self._refresh_succ_lists()
 
@@ -167,7 +236,7 @@ class ChordRing:
             idx = bisect.bisect_left(self._vhashes, vh)
             del self._vhashes[idx]
             del self._vowners[idx]
-        self.weights.pop(node_id, None)
+        self._drop_weight(node_id)
         # the dead node's own routing state dies with it; everyone else's
         # stale references remain until the periodic repair runs
         for vh in removed:

@@ -303,6 +303,17 @@ class EdgeKVCluster:
         # resurrect it: the key was deleted at its (new) owner during the
         # unavailability / migration window, and the delete wins
         self.tombstones: Dict[str, Set[str]] = {}
+        # ------- hot-key read replicas (§7.3 mirror machinery) -------
+        # key -> {"owner": gid at install, "value": ..., "hits": int}; a
+        # bounded set of extra read replicas for skew-detected hot keys.
+        # Writes still linearize through the owner; the entry is revoked
+        # on every put/delete/lease-acquire (same discipline as the
+        # tombstone revoke-on-put above), so a mirror read can never
+        # resurrect a deleted key or serve a superseded value.
+        self.hot_mirrors: Dict[str, dict] = {}
+        self.hot_mirror_limit = 16
+        self.hot_stats: Dict[str, int] = dict(
+            installed=0, dropped=0, invalidated=0, mirror_reads=0)
         # async handoff jobs: job id -> bookkeeping; a job finalizes (e.g.
         # actually dropping a drained group) once its last lease resolves
         self.handoff_jobs: Dict[int, dict] = {}
@@ -688,6 +699,110 @@ class EdgeKVCluster:
         self.migrations.append(("remove", gid, moved))
         return moved
 
+    def reweight_group(self, gid: str, weight: float, *,
+                       async_handoff: bool = False) -> int:
+        """Change a live group's §7.1 ring weight in place (the feedback
+        half of the rebalance loop).
+
+        The vnode delta is incremental — :meth:`ChordRing.reweight_node`
+        adds or removes only the suffix of the group's vnode sequence that
+        the new weight implies, leaving every other arc untouched — and the
+        keys whose successor changed (in *either* direction: arcs shed by a
+        shrinking group, arcs captured by a growing one) are re-homed with
+        the same write -> read-barrier -> delete migration as
+        :meth:`add_group`. With ``async_handoff=True`` the moved keys are
+        leased instead, so client writes never stall behind the rebalance.
+        Returns the number of keys migrated (or leased).
+        """
+        self._require_whole_view("membership change (reweight_group)")
+        if gid not in self.groups:
+            raise KeyError(gid)
+        if gid in self.draining:
+            raise RuntimeError(f"cannot reweight {gid!r}: it is mid-drain")
+        gw_id = self.gateway_of_group[gid]
+        self.drain_handoff()
+        # snapshot ownership BEFORE the ring changes (see add_group): the
+        # delta may move arcs toward OR away from gid, so every live
+        # gateway is a potential source
+        owned_before: List[Tuple[str, EdgeGroup]] = []
+        for other_gw, gw in self.gateways.items():
+            if other_gw not in self.ring.nodes:
+                continue  # draining gateway: already off the ring
+            src = gw.group
+            lead = src.raft.run_until_leader()
+            src.raft.step(0.0)  # read barrier: leader state is current
+            owned_before.extend(
+                (k, src) for k in list(src.storage[lead.id].stores[GLOBAL])
+                if self.ring.locate(k) == other_gw)
+        added, removed = self.ring.reweight_node(gw_id, weight)
+        if not added and not removed:
+            # same vnode count: nothing can have moved — skip the cache
+            # flush and the (empty) handoff entirely
+            self.migrations.append(("reweight", gid, 0))
+            return 0
+        self._invalidate_location_caches()
+        moving = [(key, src) for key, src in owned_before
+                  if self.ring.locate(key)
+                  != self.gateway_of_group[src.id]]
+        if async_handoff:
+            job = self._start_job("reweight", gid)
+            for key, src in moving:
+                if key not in self.leases:
+                    dest_gid = self.gateways[self.ring.locate(key)].group.id
+                    self._acquire_lease(key, src.id, dest_gid, job)
+            self._rewire_backups()
+            leased = self.handoff_jobs[job]["leased"]
+            self.migrations.append(("reweight-async", gid, leased))
+            self._maybe_finalize(job)
+            return leased
+        moved = 0
+        for key, src in moving:
+            dest = self.gateways[self.ring.locate(key)].group
+            moved += self._migrate_key(src, dest, key)
+        self._rewire_backups()
+        self.migrations.append(("reweight", gid, moved))
+        return moved
+
+    # ------------------------------------------- hot-key read replicas
+    def replicate_hot_key(self, key: str) -> bool:
+        """Install a bounded extra read replica for a skew-detected hot
+        key, seeded with a linearizable read at the owner (§7.3 mirror
+        machinery; writes still linearize through the owner and revoke the
+        replica, see :func:`repro.core.resource_finder.resource_put`).
+        Refusals — active cut, leased key, replica budget exhausted,
+        unreachable owner — are non-mutating and return ``False``."""
+        if key in self.hot_mirrors:
+            return True
+        if self.partition_of is not None:
+            return False  # no global view: the seed read may be stale
+        if self.dead_groups:
+            # unavailability window: the key's value may survive only in
+            # a §7.3 backup mirror awaiting promotion — a linearizable
+            # read at the (new) ring owner would seed the replica with a
+            # miss and serve it even after recovery
+            return False
+        if key in self.leases:
+            return False  # authority is mid-flight
+        if len(self.hot_mirrors) >= self.hot_mirror_limit:
+            return False
+        group = self.gateways[self.ring.locate(key)].group
+        if not group.reachable:
+            return False
+        res = group.get(GLOBAL, key, linearizable=True)
+        if not res.ok:
+            return False
+        self.hot_mirrors[key] = dict(owner=group.id, value=res.value,
+                                     hits=0)
+        self.hot_stats["installed"] += 1
+        return True
+
+    def unreplicate_hot_key(self, key: str) -> bool:
+        """Drop a hot-key replica (the key cooled off). Idempotent."""
+        if self.hot_mirrors.pop(key, None) is None:
+            return False
+        self.hot_stats["dropped"] += 1
+        return True
+
     def _migrate_adopted_local(self, gid: str, gw_id: str) -> None:
         """Move the namespaced local data ``gid`` adopted from crashed
         groups (see :func:`repro.core.backup.promote_backup`) to the
@@ -919,6 +1034,10 @@ class EdgeKVCluster:
                        tier: str = GLOBAL) -> MigrationLease:
         lease = self.leases.acquire(key, src, dst, job=job, value=value,
                                     staged=staged, tier=tier)
+        # a key entering migration loses its hot mirror: authority is in
+        # flight, so the bounded replica may no longer track the owner
+        if self.hot_mirrors.pop(key, None) is not None:
+            self.hot_stats["invalidated"] += 1
         if job is not None:
             self.handoff_jobs[job]["leased"] += 1
             self.handoff_jobs[job]["pending"] += 1

@@ -95,6 +95,8 @@ def resource_put(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str,
         lease.dirty = True       # source copy superseded: never copied
         lease.tombstone = False  # a fresh write revokes a pending delete
         cluster.tombstones.pop(key, None)
+        if cluster.hot_mirrors.pop(key, None) is not None:
+            cluster.hot_stats["invalidated"] += 1  # mirror revoked on put
         res.dht_path = [gw.id, cluster.gateway_of_group[lease.dst]]  # type: ignore[attr-defined]
         res.leased = True  # type: ignore[attr-defined]
         return res
@@ -103,6 +105,8 @@ def resource_put(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str,
         return OpResult(False, value=None, leader=None)  # writes must fail over partition
     res = group.put(GLOBAL, key, value)
     cluster.tombstones.pop(key, None)  # fresh write supersedes any tombstone
+    if cluster.hot_mirrors.pop(key, None) is not None:
+        cluster.hot_stats["invalidated"] += 1  # mirror revoked on put
     res.dht_path = path  # type: ignore[attr-defined]
     return res
 
@@ -145,6 +149,19 @@ def resource_get(cluster: "EdgeKVCluster", gw: "GatewayNode", key: str, *,
         res.dht_path = lease_path  # type: ignore[attr-defined]
         res.leased = True  # type: ignore[attr-defined]
         return res
+    mirror = cluster.hot_mirrors.get(key)
+    if mirror is not None:
+        # hot-key mirror (§7.3 machinery repurposed for skew): a bounded
+        # extra read replica served at the client's own gateway without a
+        # quorum round — serializable, like a backup read. Revoke-on-put/
+        # delete/lease keeps the copy equal to the owner's committed
+        # value, so it can never serve a superseded or deleted key.
+        mirror["hits"] += 1
+        cluster.hot_stats["mirror_reads"] += 1
+        res = OpResult(True, value=mirror["value"], quorum_size=1)
+        res.from_mirror = True  # type: ignore[attr-defined]
+        res.dht_path = [gw.id]  # type: ignore[attr-defined]
+        return res
     group, owner_gw, path = _owner(cluster, gw, key)
     if not group.reachable:
         # §7.3: a backup serves READS ONLY, possibly stale ->
@@ -171,6 +188,8 @@ def resource_delete(cluster: "EdgeKVCluster", gw: "GatewayNode",
         res = dst.delete(GLOBAL, key)
         lease.dirty = True
         lease.tombstone = True  # the delete wins over the source copy
+        if cluster.hot_mirrors.pop(key, None) is not None:
+            cluster.hot_stats["invalidated"] += 1  # mirror must not resurrect
         if cluster.dead_groups:
             # a pending mirror promotion must not resurrect the key either
             cluster.tombstones.setdefault(key, set()).update(
@@ -182,6 +201,8 @@ def resource_delete(cluster: "EdgeKVCluster", gw: "GatewayNode",
     if not group.reachable:
         return OpResult(False)
     res = group.delete(GLOBAL, key)
+    if cluster.hot_mirrors.pop(key, None) is not None:
+        cluster.hot_stats["invalidated"] += 1  # mirror must not resurrect
     if cluster.dead_groups:
         # unavailability window: some group's keys survive only in §7.3
         # mirrors awaiting promotion. This delete (committed at the key's

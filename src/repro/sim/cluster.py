@@ -220,6 +220,30 @@ class SimEdgeKV:
         self.leases: Dict[str, list] = {}
         self.handoff_stats = dict(leased=0, pulled=0, released=0,
                                   redirects=0, superseded=0)
+        # ------- hot-key mirrors + feedback rebalancing -------
+        # keys currently served by a bounded extra read replica at the
+        # client's own gateway (§7.3 mirror machinery repurposed for
+        # skew). A global WRITE revokes the key's entry at its
+        # gateway-admit instant — before any routing — so a mirror read
+        # can never serve a superseded value; with no deletes in the YCSB
+        # op mix the virtual replica therefore always equals the owner
+        # copy, and a crash cannot strand it (the mirror survives as the
+        # extra copy, exactly the §7.3 read-only failover semantics).
+        # Shared by both engines; mutated in place.
+        self.hot_keys: Set[str] = set()
+        self.hot_key_limit = 16
+        self.hot_stats = dict(installed=0, dropped=0, invalidated=0,
+                              mirror_reads=0)
+        # per-key global-op dispatch counts sampled at the gateway-admit
+        # instant in BOTH engines (the controller's sliding-window hot-key
+        # signal); tracking is off unless a RebalanceController arms it
+        self.track_hot = False
+        self.hot_track: Dict[str, int] = {}
+        # fast engine: flush completed op records at aux-event boundaries
+        # so a controller sampling group_stats mid-run sees the same
+        # completed-op prefix the oracle's append-at-completion stream
+        # shows (armed together with track_hot)
+        self.live_stats = False
         # §7.2 gateway location cache (beyond-paper evaluation: the paper
         # proposes it as future work; we measure it)
         self.gw_cache: Dict[str, Any] = {}
@@ -339,6 +363,79 @@ class SimEdgeKV:
             store.clear()
         self.churn_events.append((self.env.now, "remove", gid, moved))
         return moved
+
+    def reweight_group(self, gid: str, weight: float, *,
+                       async_handoff: bool = False) -> int:
+        """Change a live group's §7.1 ring weight mid-run (the actuation
+        half of the rebalance feedback loop); returns global keys moved.
+
+        The vnode delta is incremental (:meth:`ChordRing.reweight_node`
+        adds/removes only the suffix the new weight implies), and every
+        global key whose successor changed — in either direction — is
+        re-homed to its new owner. With ``async_handoff=True`` the moved
+        keys are *leased* instead (writes never stall behind the
+        rebalance; reads pull on demand), returning keys leased. Planned
+        membership events serialize behind an in-flight handoff, as
+        everywhere else.
+        """
+        self._require_whole_view("membership change (reweight_group)")
+        g = self.groups[gid]
+        if g["retired"]:
+            raise ValueError(f"{gid} is retired")
+        if self.leases:
+            self.release_leases()  # serialize behind an in-flight handoff
+        gw = self.gateway_of_group[gid]
+        added, removed = self.ring.reweight_node(gw, weight)
+        if not added and not removed:
+            # same vnode count: no arc moved, no handoff, no epoch bump
+            self.churn_events.append((self.env.now, "reweight", gid, 0))
+            return 0
+        self._invalidate_gw_caches()
+        moved = 0
+        for other, og in self.groups.items():
+            if og["retired"]:
+                continue
+            store = og["state"].stores[GLOBAL]
+            other_gw = self.gateway_of_group[other]
+            for key in [k for k in store
+                        if self.ring.locate(k) != other_gw]:
+                owner_gid = self.group_of_gateway[self.ring.locate(key)]
+                if async_handoff:
+                    if key not in self.leases:
+                        self.leases[key] = [other, owner_gid, False]
+                        self.handoff_stats["leased"] += 1
+                        moved += 1
+                    continue
+                self.groups[owner_gid]["state"].apply(
+                    ("put", GLOBAL, key, store[key]))
+                og["state"].apply(("delete", GLOBAL, key, None))
+                moved += 1
+        self.churn_events.append((self.env.now, "reweight", gid, moved))
+        return moved
+
+    def replicate_hot_key(self, key: str) -> bool:
+        """Install the bounded extra read replica for a hot key (§7.3
+        mirror machinery). Refusals — active cut, key mid-migration,
+        replica budget exhausted — are non-mutating and return False."""
+        if key in self.hot_keys:
+            return True
+        if self.partition_of:
+            return False  # no global view: the seed copy may be stale
+        if key in self.leases:
+            return False  # authority is mid-flight
+        if len(self.hot_keys) >= self.hot_key_limit:
+            return False
+        self.hot_keys.add(key)
+        self.hot_stats["installed"] += 1
+        return True
+
+    def unreplicate_hot_key(self, key: str) -> bool:
+        """Drop a hot-key replica (the key cooled off). Idempotent."""
+        if key not in self.hot_keys:
+            return False
+        self.hot_keys.discard(key)
+        self.hot_stats["dropped"] += 1
+        return True
 
     def release_leases(self, max_keys: Optional[int] = None) -> int:
         """Resolve up to ``max_keys`` pending leases (all by default) in
@@ -918,6 +1015,42 @@ class SimEdgeKV:
                         bounds=(self._bounds(t0, tb)
                                 if tb is not None else None))
                     return
+            if self.track_hot:
+                # controller feedback signal: per-key dispatch counts at
+                # the gateway-admit instant (the fast engine counts at
+                # the matching two-phase lookup event)
+                self.hot_track[op.key] = self.hot_track.get(op.key, 0) + 1
+            if self.hot_keys:
+                if is_write:
+                    if op.key in self.hot_keys:
+                        # revoke-on-put (PR 5 discipline): the write still
+                        # linearizes through the owner below; the mirror
+                        # entry dies before the route is even resolved
+                        self.hot_keys.discard(op.key)
+                        self.hot_stats["invalidated"] += 1
+                elif op.key in self.hot_keys:
+                    # hot-key mirror read: served by the extra replica
+                    # installed *at the client's own gateway* (the §7.3
+                    # mirror machinery, matching the core layer's
+                    # resource_get) — no Chord routing, no leader queue,
+                    # no ReadIndex quorum round (serializable, like a
+                    # backup read); the revoke-on-put above keeps the
+                    # replica equal to the owner's committed copy
+                    self.hot_stats["mirror_reads"] += 1
+                    if tb is not None:
+                        tb[B_QUEUE] = self.env.now
+                    yield Timeout(self.service.read_s)
+                    if tb is not None:
+                        tb[B_SERVICE] = self.env.now
+                    yield Timeout(self.net.xfer("st_gw", resp))
+                    yield Timeout(self.net.xfer("cli_st", resp))
+                    self.records.append(
+                        t0, self.env.now - t0, KIND_CODE[op.kind],
+                        DTYPE_CODE[op.dtype],
+                        self.records.group_code(client_gid), 0,
+                        bounds=(self._bounds(t0, tb)
+                                if tb is not None else None))
+                    return
             cached_owner = (self.gw_cache[gw].get(op.key)
                             if self.gw_cache else None)
             if cached_owner is not None:
@@ -1165,6 +1298,9 @@ class SimEdgeKV:
         for k, v in self.handoff_stats.items():
             reg.counter(f"sim.handoff.{k}").inc(v)
         reg.gauge("sim.handoff.pending").set(len(self.leases))
+        for k, v in self.hot_stats.items():
+            reg.counter(f"sim.hot.{k}").inc(v)
+        reg.gauge("sim.hot.active").set(len(self.hot_keys))
         reg.counter("sim.lost_ops").inc(self.lost_ops)
         reg.counter("sim.churn.events").inc(len(self.churn_events))
         reg.gauge("sim.churn.epoch").set(self.churn_epoch)

@@ -298,9 +298,18 @@ class _FastEngine:
         # location cache makes routing order-dependent OR any auxiliary
         # process (churn/fault/scenario driver) can change membership or
         # cut the network mid-run — a route (or refusal verdict) drawn
-        # before such an event must not outlive it.
+        # before such an event must not outlive it. Hot-key mirrors and
+        # dispatch tracking resolve per op at the lookup instant too, so
+        # they force the two-phase path as well.
         self.dynamic = (bool(sim.gw_cache) or bool(self.aux)
-                        or bool(sim.partition_of))
+                        or bool(sim.partition_of) or bool(sim.hot_keys)
+                        or sim.track_hot)
+        # mirror-served reads complete at the gateway: read_s service
+        # plus a constant (gw -> edge -> client) response chain
+        self._mirror_post = (self.dm.sg_resp[0], self.dm.c_resp[0])
+        # live-stats mode: completed-but-unflushed op indices, emitted
+        # into sim.records at each aux-event boundary (see _flush_records)
+        self._to_flush: List[int] = []
         self.serving: List[int] = self.client_code.tolist()
         self.hops: List[int] = [0] * n_ops
         self.op_pre: List[tuple] = [()] * n_ops
@@ -417,11 +426,59 @@ class _FastEngine:
         self.op_pre[i], self.op_svc[i], self.op_post[i] = prof
 
     # ---------------------------------------------------------------- run
+    def _flush_records(self, t: float) -> None:
+        """Live-stats mode: emit every completed-but-unflushed op with
+        completion <= ``t`` into ``sim.records``. An op's completion is
+        computed at its leader-arrival event (which precedes it in
+        virtual time), so once the heap has advanced to ``t`` the flushed
+        prefix equals the oracle's append-at-completion record stream —
+        an aux process (the rebalance controller) sampling cached
+        group_stats mid-run sees the same feedback signal on both
+        engines. Batches stay (completion, pid)-sorted and successive
+        batches cover disjoint ascending completion ranges, so the final
+        record order matches the bulk path bit-for-bit."""
+        pend = self._to_flush
+        comp = self.completion
+        ready = [j for j in pend if comp[j] <= t]
+        if not ready:
+            return
+        pend[:] = [j for j in pend if comp[j] > t]  # alias-safe in run()
+        self._emit(np.asarray(ready, dtype=np.int64))
+
+    def _emit(self, idx: np.ndarray) -> None:
+        """Append the records for op indices ``idx`` in (completion, pid)
+        order — the oracle's completion-event execution order."""
+        comp = np.asarray(self.completion)[idx]
+        order = idx[np.lexsort((self.op_pid[idx], comp))]
+        bounds = None
+        if self.trace:
+            prev = np.asarray(self.t_start)[order]
+            bounds = []
+            for col in self.b_cols:
+                filled = np.asarray(col)[order]
+                nan = np.isnan(filled)
+                if nan.any():
+                    filled = np.where(nan, prev, filled)
+                bounds.append(filled)
+                prev = filled
+            bounds.append(np.asarray(self.completion)[order])
+        self.sim.records.extend_columns(
+            np.asarray(self.t_start)[order],
+            np.asarray(self.latency)[order],
+            self.kind[order], self.dtype[order],
+            self.client_code[order],
+            np.asarray(self.hops, dtype=np.int32)[order],
+            bounds=bounds)
+
     def _step_aux(self, pid: int, t: float) -> None:
         sim = self.sim
         sim.env.now = t
         if t > self.last_time:
             self.last_time = t
+        if sim.live_stats and self._to_flush:
+            # the aux process may sample records/stats: surface every op
+            # that has completed by now, before stepping the generator
+            self._flush_records(t)
         gen = self.aux[pid]
         epoch = sim.churn_epoch
         try:
@@ -463,6 +520,8 @@ class _FastEngine:
         pull_xfer = sim.net.xfer("gw_gw", RECORD_BYTES + REQ_BYTES)
         home_memo, khash = self._home_memo, self._khash
         dynamic = self.dynamic
+        live = sim.live_stats
+        to_flush = self._to_flush
         pop, push = heapq.heappop, heapq.heappush
         max_completion = 0.0
         arrival_phase = self.arrival_phase = [True] * len(cursor)
@@ -525,10 +584,42 @@ class _FastEngine:
             if i < thread_end[tau]:
                 push_op(i, tau, base)
 
+        # live-stats mode defers each global write's store mutation to a
+        # dedicated heap event at its replicate instant — the virtual
+        # time the oracle's _group_write applies it — so an aux observer
+        # (the rebalance controller) samples identical store snapshots
+        # on both engines. One pending apply per thread, max: the
+        # thread's next op starts at completion >= the apply instant.
+        apply_key: List[Optional[str]] = [None] * len(cursor)
+        apply_ki = [0] * len(cursor)
+        apply_g = [0] * len(cursor)
+
         while heap:
             a, pid, tau = pop(heap)
             if tau < 0:
-                self._step_aux(pid, a)
+                if tau == -1:
+                    self._step_aux(pid, a)
+                    continue
+                # deferred global write apply (encoded tau = -2 - thread)
+                th = -2 - tau
+                key = apply_key[th]
+                apply_key[th] = None
+                if churn_events:
+                    ki = apply_ki[th]
+                    store = home_memo.get(ki)
+                    if store is None:
+                        kh = khash.get(ki)
+                        if kh is None:
+                            kh = khash[ki] = stable_hash(key)
+                        owner_gid = sim.group_of_gateway[
+                            sim.ring.locate_hash(kh)]
+                        store = home_memo[ki] = \
+                            sim.groups[owner_gid]["state"].stores[GLOBAL]
+                    store[key] = _VAL
+                    if unavail:
+                        unavail.pop(key, None)
+                else:
+                    stores[1][apply_g[th]][key] = _VAL
                 continue
             i = cursor[tau]
             if not arrival_phase[tau]:
@@ -550,6 +641,47 @@ class _FastEngine:
                         completion[i] = c
                         if c > max_completion:
                             max_completion = c
+                        if live:
+                            to_flush.append(i)
+                        nxt = i + 1
+                        if nxt < thread_end[tau]:
+                            cursor[tau] = nxt
+                            push_op(nxt, tau, c)
+                        continue
+                # hot-key hooks at the gateway-admit instant — same
+                # virtual-time position as the oracle's client_op hooks
+                # (after the split-brain check, before route resolution)
+                if sim.track_hot:
+                    k = op_key[i]
+                    sim.hot_track[k] = sim.hot_track.get(k, 0) + 1
+                if sim.hot_keys:
+                    k = op_key[i]
+                    if is_w[i]:
+                        if k in sim.hot_keys:
+                            # write linearizes through the owner: revoke
+                            # the read replica before the op proceeds
+                            sim.hot_keys.discard(k)
+                            sim.hot_stats["invalidated"] += 1
+                    elif k in sim.hot_keys:
+                        # mirror read: served by the replica at the
+                        # client's own gateway — no overlay hops, no
+                        # leader queue, no ReadIndex (the oracle's
+                        # mirror branch, same delay terms)
+                        sim.hot_stats["mirror_reads"] += 1
+                        self.hops[i] = 0
+                        c = a + dm.svc_base[0]
+                        if trace:
+                            b_route[i] = b_lease[i] = b_ingr[i] = a
+                            b_queue[i] = a
+                            b_svc[i] = c
+                        c += self._mirror_post[0]
+                        c += self._mirror_post[1]
+                        latency[i] = c - t_start[i]
+                        completion[i] = c
+                        if c > max_completion:
+                            max_completion = c
+                        if live:
+                            to_flush.append(i)
                         nxt = i + 1
                         if nxt < thread_end[tau]:
                             cursor[tau] = nxt
@@ -583,6 +715,8 @@ class _FastEngine:
                 completion[i] = c
                 if c > max_completion:
                     max_completion = c
+                if live:
+                    to_flush.append(i)
                 nxt = i + 1
                 if nxt < thread_end[tau]:
                     cursor[tau] = nxt
@@ -658,7 +792,14 @@ class _FastEngine:
             busy[g] += svc
             dt = dtypes[i]
             if is_w[i]:
-                if dt and churn_events:
+                if dt and live:
+                    # defer the store mutation to the replicate instant
+                    # (see the apply-event comment above the loop)
+                    apply_key[tau] = key
+                    apply_ki[tau] = l_key_idx[i]
+                    apply_g[tau] = g
+                    push(heap, (dep + op_post[i][0], pid, -2 - tau))
+                elif dt and churn_events:
                     # the key may have been re-homed while in flight: the
                     # write follows the handoff (core-layer semantics)
                     ki = l_key_idx[i]
@@ -695,6 +836,8 @@ class _FastEngine:
             completion[i] = c
             if c > max_completion:
                 max_completion = c
+            if live:
+                to_flush.append(i)
             nxt = i + 1
             if nxt < thread_end[tau]:
                 cursor[tau] = nxt
@@ -712,6 +855,14 @@ class _FastEngine:
             g["page_cache"].hits += self.cache_hits[c]
             g["page_cache"].misses += self.cache_miss[c]
         if not self.n_ops:
+            return
+        if self.sim.live_stats:
+            # incremental mode: earlier batches already flushed at aux
+            # ticks; emit whatever completed after the last tick
+            if self._to_flush:
+                pend = self._to_flush
+                self._to_flush = []
+                self._emit(np.asarray(pend, dtype=np.int64))
             return
         comp = np.asarray(self.completion)
         # the oracle appends records at completion-event execution, i.e. in
@@ -1085,6 +1236,10 @@ def run_open_loop_fast(sim: SimEdgeKV, rate: float, duration: float,
     the departure scan still runs once per serving group over the whole
     run (the leader queue persists across epochs).
     """
+    if sim.hot_keys or sim.track_hot or sim.live_stats:
+        raise NotImplementedError(
+            "hot-key mirrors / live stats need the per-op heap engine; "
+            "use the closed-loop fast path")
     aux: Dict[int, Generator] = dict(sim.env.pending)
     sim.env.pending = []
     had_aux = bool(aux)

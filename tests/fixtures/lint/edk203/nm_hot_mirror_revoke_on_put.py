@@ -1,0 +1,12 @@
+"""Near miss: the hot-key mirror discipline — a fresh write through the
+owner revokes the key's read replica before acking, so a mirror read can
+never serve a superseded value."""
+
+
+def resource_put(cluster, key, value):
+    cluster.store[key] = value
+    cluster.hot_mirrors.pop(key, None)
+
+
+def replicate_hot_key(cluster, key):
+    cluster.hot_mirrors[key] = dict(value=cluster.store.get(key), hits=0)

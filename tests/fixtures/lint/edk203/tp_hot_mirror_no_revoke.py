@@ -1,0 +1,11 @@
+"""True positive: a hot-key read replica is installed but no put-named
+function revokes it, so a write through the owner leaves the mirror
+serving the superseded value forever."""
+
+
+def resource_put(cluster, key, value):
+    cluster.store[key] = value
+
+
+def replicate_hot_key(cluster, key):
+    cluster.hot_mirrors[key] = dict(value=cluster.store.get(key), hits=0)

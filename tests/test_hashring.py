@@ -99,6 +99,73 @@ def test_weighted_virtual_nodes():
     assert dist["big"] > 2.0 * dist["small"]
 
 
+def test_vnode_count_monotone_in_weight():
+    """Regression: banker's rounding mapped halfway weights
+    non-monotonically (1.5 -> 2 but 2.5 -> 2 with base_vnodes=1), so a
+    strictly larger weight could own *fewer* ring arcs. Counts must be
+    non-decreasing in the weight for every base vnode multiplier."""
+    for base in (1, 2, 3, 8):
+        ring = ChordRing(virtual_nodes=base)
+        weights = [w / 4 for w in range(1, 41)]  # 0.25 .. 10.0 step 0.25
+        counts = [ring._vnode_count(w) for w in weights]
+        assert counts == sorted(counts), (base, counts)
+        # half-up at the .5 boundaries, never half-to-even
+        assert ring._vnode_count(1.5) == round(1.5 * base + 0.5 - 1e-12) \
+            or ring._vnode_count(1.5) == int(1.5 * base + 0.5)
+    with pytest.raises(ValueError):
+        ChordRing()._vnode_count(0.0)
+
+
+def test_reweight_node_equivalent_to_full_rebuild():
+    """Incremental reweight (suffix add/remove of the vnode sequence)
+    must land on exactly the ring a from-scratch build with the new
+    weight produces — same vnode hashes, same owner for every key."""
+    keys = [f"key-{i}" for i in range(1500)]
+    for new_w in (0.25, 0.5, 1.0, 2.0, 3.5):
+        inc = make_ring(8, vnodes=4)
+        rebuilds_before = inc.finger_rebuilds
+        added, removed = inc.reweight_node("gw3", new_w)
+        assert inc.finger_rebuilds == rebuilds_before  # incremental only
+        full = ChordRing(virtual_nodes=4)
+        for i in range(8):
+            full.add_node(f"gw{i}", weight=new_w if i == 3 else 1.0)
+        assert sorted(inc.nodes["gw3"]) == sorted(full.nodes["gw3"])
+        assert inc._vhashes == full._vhashes
+        for k in keys:
+            assert inc.locate(k) == full.locate(k), k
+        # the delta is exactly the suffix the count change implies
+        c_new = inc._vnode_count(new_w)
+        assert len(added) == max(0, c_new - 4)
+        assert len(removed) == max(0, 4 - c_new)
+
+
+def test_reweight_noop_when_count_unchanged():
+    ring = make_ring(6, vnodes=4)
+    before = list(ring._vhashes)
+    added, removed = ring.reweight_node("gw2", 1.05)  # same vnode count
+    assert (added, removed) == ([], [])
+    assert ring._vhashes == before
+    assert ring.weights["gw2"] == 1.05  # weight still recorded
+
+
+def test_weight_entries_never_leak():
+    """Regression: remove/crash paths each deleted the weight entry ad
+    hoc and one path forgot, so a node could depart leaving a stale
+    weight that a later re-add silently resurrected. All teardown now
+    routes through _drop_weight."""
+    ring = make_ring(6, vnodes=4)
+    ring.reweight_node("gw1", 3.0)
+    ring.remove_node("gw1")
+    assert "gw1" not in ring.weights
+    ring.crash_node("gw2")
+    assert "gw2" not in ring.weights
+    assert set(ring.weights) == set(ring.nodes)
+    # re-adding gets the default weight, not the leaked 3.0
+    ring.add_node("gw1")
+    assert ring.weights["gw1"] == 1.0
+    assert len(ring.nodes["gw1"]) == ring._vnode_count(1.0)
+
+
 def test_successor_group_rule():
     ring = make_ring(5)
     for nid in list(ring.nodes):

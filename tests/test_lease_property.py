@@ -6,13 +6,17 @@ Two machines, >= 200 hypothesis examples each:
   retarget / release sequences against :class:`repro.core.lease.LeaseTable`
   — accounting and uniqueness invariants;
 * a **cluster interleaving machine** (the PR-4 membership machine extended
-  with async handoff and, this PR, network partitions): random
-  interleavings of client writes/deletes with add/remove/crash/stabilize/
-  recover/step_handoff plus partition/heal, leases in flight across every
-  membership event and cuts landing mid-drain — invariants: zero lost
-  acknowledged writes, zero double-applied writes (exactly-one-owner),
-  every lease eventually released or aborted, refusals (membership *and*
-  cross-cut client ops) non-mutating, no key resurrected by a heal.
+  with async handoff, network partitions and, this PR, feedback-driven
+  rebalancing): random interleavings of client writes/deletes with
+  add/remove/crash/stabilize/recover/step_handoff plus partition/heal,
+  reweight_group and hot-key replicate/unreplicate, leases in flight
+  across every membership event and cuts landing mid-drain — invariants:
+  zero lost acknowledged writes, zero double-applied writes
+  (exactly-one-owner), every lease eventually released or aborted,
+  refusals (membership *and* cross-cut client ops) non-mutating, no key
+  resurrected by a heal, and every live hot-key mirror equal to its
+  owner's committed value (so a mirror read can never serve a superseded
+  or deleted key).
 
 Runs under real hypothesis or the deterministic fallback shim in
 ``tests/conftest.py``.
@@ -133,7 +137,7 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
         return any_client() if c.partition_of is None else authority(k)
 
     for step in seq:
-        r = step % 10
+        r = step % 12
         live = [g for g in c.groups if g not in c.draining]
         if r == 0:  # put (fresh or overwrite)
             pool = sorted(model) + [f"w/{serial}"]
@@ -207,12 +211,45 @@ def test_cluster_interleavings_with_inflight_leases(seq, seed):
             c.heal_partition()  # pure merge: replay, not arbitration
             assert c.refusals == refusals_before
             assert c.partition_of is None and c.ring.stabilized
+        elif r == 10 and live and not c.dead_groups:
+            # feedback actuation: reweight a live group's ring arc
+            gid = live[step % len(live)]
+            new_w = (0.5, 1.0, 2.0, 3.0)[(step // 12) % 4]
+            weights_before = dict(c.ring.weights)
+            try:
+                c.reweight_group(gid, new_w,
+                                 async_handoff=bool(step & 1))
+            except RuntimeError:
+                # refusal (cut active / mid-drain) is non-mutating
+                assert c.ring.weights == weights_before
+        elif r == 11:
+            # hot-key mirror churn: replicate from the live pool, cool
+            # off a previously mirrored key
+            pool = sorted(model) + sorted(deleted)
+            if pool:
+                k = pool[step % len(pool)]
+                if c.replicate_hot_key(k):
+                    assert c.hot_mirrors[k]["value"] == model.get(k)
+                else:
+                    # refusal is non-mutating (cut / lease / budget /
+                    # unreachable owner)
+                    assert k not in c.hot_mirrors
+            if c.hot_mirrors and step & 1:
+                c.unreplicate_hot_key(sorted(c.hot_mirrors)[step %
+                                      len(c.hot_mirrors)])
         # a fresh acknowledged write survives whatever just happened
         k = f"a/{serial}"
         serial += 1
         assert c.put(k, serial, GLOBAL, client_group=aligned_client(k)).ok
         model[k] = serial
         assert c.leases.balanced()
+        # every live mirror equals its owner's committed value: writes,
+        # deletes, and lease acquires all revoke before acking, so a
+        # mirror read can never resurrect or serve a superseded value
+        # (a mirror seeded AFTER a delete holds the owner's None — still
+        # equal, still un-resurrectable)
+        for mk, m in c.hot_mirrors.items():
+            assert m["value"] == model.get(mk), (mk, m["value"])
 
     # settle: heal any open cut, recover every pending crash, drain leases
     if c.partition_of is not None:

